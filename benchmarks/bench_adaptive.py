@@ -1,0 +1,25 @@
+"""Fig 4-right: adaptive parallelism vs fixed parallelism (3 SD3
+workflows, 4 GPUs)."""
+
+from benchmarks.common import emit, run_lego_trace
+from repro.diffusion import table2_setting
+from repro.sim import generate_trace
+
+
+def run() -> None:
+    wfs = table2_setting("s1")
+    trace = generate_trace(list(wfs), rate=1.2, duration=240, cv=1.0, seed=9)
+    lats = {}
+    for tag, kw in (
+        ("p1", {"fixed_parallelism": 1}),
+        ("p2", {"fixed_parallelism": 2}),
+        ("adaptive", None),
+    ):
+        sys_ = run_lego_trace(wfs, trace, 4, slo_scale=None, admission=False,
+                              scheduler_kwargs=kw)
+        lats[tag] = sys_.mean_latency()
+        emit(f"fig4_adaptive[{tag}]", lats[tag] * 1e6, "")
+    emit("fig4_adaptive_speedup_vs_p1", lats["adaptive"] * 1e6,
+         f"{lats['p1']/lats['adaptive']:.2f}x")
+    emit("fig4_adaptive_speedup_vs_p2", lats["adaptive"] * 1e6,
+         f"{lats['p2']/lats['adaptive']:.2f}x")

@@ -1,0 +1,18 @@
+"""Fig 10-right: SLO-aware admission control on/off under overload
+(settings S1-S4, high rate scale)."""
+
+from benchmarks.common import emit, run_lego_trace
+from repro.diffusion import table2_setting
+from repro.sim import generate_trace
+
+
+def run() -> None:
+    for s in ("s1", "s2", "s3", "s4"):
+        wfs = table2_setting(s)
+        trace = generate_trace(list(wfs), rate=6.0, duration=120, cv=2.0, seed=29)
+        on = run_lego_trace(wfs, trace, 8, slo_scale=2.0, admission=True
+                            ).slo_attainment()
+        off = run_lego_trace(wfs, trace, 8, slo_scale=2.0, admission=False
+                             ).slo_attainment()
+        emit(f"fig10_admission[{s}]", 0.0,
+             f"with_ac={on:.2f};without_ac={off:.2f}")

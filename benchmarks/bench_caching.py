@@ -1,0 +1,31 @@
+"""§7.4: Nirvana-style approximate caching — speedup at 20%/40% skipped
+denoising computation (compiler pass rewrite, no workflow change)."""
+
+from benchmarks.common import emit
+from repro.core import GraphCompiler, ServingSystem
+from repro.core.passes import ApproximateCachingPass, default_passes
+from repro.core.admission import critical_path_seconds
+from repro.diffusion import ApproxCache, make_basic_workflow
+from repro.diffusion.config import FAMILIES
+
+
+def run() -> None:
+    fam = "sdxl"
+    base_wf = make_basic_workflow(fam)
+    base_sys = ServingSystem(n_executors=1)
+    base_sys.register(base_wf)
+    t0 = base_sys.solo_latency(f"{fam}:basic")
+    for frac in (0.2, 0.4):
+        cache = ApproxCache(similarity_threshold=0.0)
+        cache.insert("warm prompt", int(frac * FAMILIES[fam].denoise_steps), None)
+        sys_ = ServingSystem(
+            n_executors=1,
+            extra_passes=[ApproximateCachingPass(
+                cache, backbone_model_id=f"backbone:{fam}",
+                skip_fraction=frac)],
+        )
+        wf = make_basic_workflow(fam)
+        sys_.register(wf)
+        t = sys_.solo_latency(f"{fam}:basic")
+        emit(f"s74_approx_cache[skip={int(frac*100)}%]", t * 1e6,
+             f"speedup={t0/t:.2f}x (paper: {1.17 if frac == 0.2 else 1.42}x)")

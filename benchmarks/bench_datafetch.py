@@ -1,0 +1,25 @@
+"""Fig 11: data-engine transfer latency across tensor sizes + the actual
+intermediate tensor sizes of SD3/Flux workflows."""
+
+from benchmarks.common import emit
+from repro.core.profiles import GPU_H800, ProfileStore
+from repro.diffusion import FAMILIES
+
+
+def run() -> None:
+    profiles = ProfileStore(GPU_H800)
+    for size in (2**10, 2**14, 2**17, 2**20, 2**24, 2**27, 2**29):
+        t = profiles.transfer_time(size)
+        emit(f"fig11_fetch[{size/2**20:.3f}MiB]", t * 1e6,
+             f"under_1ms={t < 1e-3}")
+    for fam in ("sd3", "flux-dev"):
+        f = FAMILIES[fam]
+        sizes = {
+            "prompt_embeds": f.text_tokens * 4096 * 2.0,
+            "latents": f.image_tokens * 16 * 2.0,
+            "cn_residuals_per_step": f.controlnet_residual_bytes(),
+            "per_request_total": f.controlnet_residual_bytes() * f.denoise_steps,
+        }
+        for k, v in sizes.items():
+            emit(f"fig11_tensor[{fam},{k}]",
+                 profiles.transfer_time(v) * 1e6, f"{v/2**20:.1f}MiB")

@@ -1,0 +1,17 @@
+"""Fig 3-right: per-model latency-throughput tradeoffs in an SD3 workflow
+(heterogeneous arithmetic intensities => no single static config fits)."""
+
+from benchmarks.common import emit
+from repro.core.profiles import GPU_H800, ProfileStore
+from repro.diffusion import ModelSet, FAMILIES
+
+
+def run() -> None:
+    profiles = ProfileStore(GPU_H800)
+    ms = ModelSet(FAMILIES["sd3"])
+    for model in (ms.text_enc, ms.backbone, ms.cn1, ms.vae_dec):
+        p = profiles.profile_model(model)
+        for b in (1, 2, 4, 8):
+            t = p.infer_time(b)
+            emit(f"fig3_latency[{model.model_id},b={b}]", t * 1e6,
+                 f"throughput={b/t:.2f}/s")

@@ -1,0 +1,75 @@
+"""§7.5: micro-serving system overheads.
+
+* end-to-end overhead of node decomposition vs a monolithic run of the
+  same models (executable plane, tiny models, measured);
+* coordinator (control-plane) share of execution at 256 executors / 500
+  inflight requests (simulation);
+* data-transmission share per request (sim accounting)."""
+
+import time
+
+from benchmarks.common import emit, run_lego_trace
+from repro.core import LocalBackend, ServingSystem
+from repro.diffusion import FAMILIES, ModelSet, make_basic_workflow, table2_setting
+from repro.sim import generate_trace
+
+
+def run() -> None:
+    # executable plane: micro-serving vs direct sequential execution.
+    # One warm-up request first so jit compilation is excluded from BOTH
+    # sides (the paper's 150 ms bound is steady-state overhead).
+    backend = LocalBackend()
+    ms = ModelSet(FAMILIES["sd3"])
+    wf = make_basic_workflow("sd3", ms)
+    sys_ = ServingSystem(n_executors=2, backend=backend)
+    sys_.register(wf)
+    sys_.submit(wf.name, inputs={"seed": 9, "prompt": "warmup"}, steps=4)
+    sys_.run()
+    r = sys_.submit(wf.name, inputs={"seed": 0, "prompt": "overhead probe"},
+                    steps=4)
+    t0 = time.perf_counter()
+    sys_.run()
+    wall = time.perf_counter() - t0
+    # direct: run the same (already warm) models inline
+    out, d1 = backend.execute(ms.text_enc, prompt="overhead probe")
+    lat = ms.latents.execute({}, seed=0)["latents"]
+    total = d1
+    for i in range(4):
+        o, dt = backend.execute(
+            ms.backbone, latents=lat, prompt_embeds=out["prompt_embeds"],
+            t=0.9, controlnet_residuals=None, guidance=4.5)
+        total += dt
+        lat = lat + 0.1 * o["velocity"]
+    _, dvae = backend.execute(ms.vae_dec, latents=lat)
+    total += dvae
+    overhead = max(0.0, wall - total)
+    emit("s75_exec_overhead", overhead * 1e6,
+         f"micro={wall:.2f}s vs direct={total:.2f}s (paper: <=150ms)")
+
+    # control-plane scalability: 256 executors, ~500 inflight
+    wfs = table2_setting("s6")
+    trace = generate_trace(list(wfs), rate=24.0, duration=30, cv=2.0, seed=31)
+    sys2 = run_lego_trace(wfs, trace, 256, slo_scale=None, admission=False)
+    busy = sys2.coordinator.total_busy_time()
+    cp = sys2.coordinator.control_plane_time
+    emit("s75_control_plane_share", cp * 1e6,
+         f"{100*cp/max(busy,1e-9):.1f}% of executor busy time "
+         f"({len(trace)} requests, 256 executors)")
+    eng = sys2.coordinator.engine
+    emit("s75_data_plane", eng.bytes_transferred / 2**20,
+         f"transfers={eng.num_transfers};local_hits={eng.num_local_hits}")
+
+    # §8: multi-coordinator sharding — same 256-GPU load split across
+    # model-sharing clusters; the (max) per-coordinator control-plane time
+    # is the scalability figure
+    from repro.core import CoordinatorGroup
+    group = CoordinatorGroup(wfs, n_executors=256, admission_enabled=False)
+    for t in trace:
+        group.submit(t.workflow, inputs=t.inputs, arrival=t.arrival)
+    group.run()
+    cp_g = group.control_plane_time()
+    busy_g = group.total_busy_time()
+    emit("s75_sharded_control_plane", cp_g * 1e6,
+         f"{group.n_coordinators} coordinators; "
+         f"{100*cp_g/max(busy_g,1e-9):.1f}% of busy time "
+         f"(vs {100*cp/max(busy,1e-9):.1f}% single-coordinator)")

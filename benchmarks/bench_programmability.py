@@ -1,0 +1,43 @@
+"""Table 3: effective LoC to express the three diffusion-specific
+optimizations, plus whether each adapts at runtime.
+
+Counted from the actual source: the lines a developer writes/reads for
+the mechanism (measured with ``inspect``), not the whole framework.
+LegoDiffusion's numbers in the paper: latent parallel 74 (Yes),
+ControlNet parallel 79 (Yes), async LoRA 61 (Yes).
+"""
+
+from __future__ import annotations
+
+import inspect
+
+from benchmarks.common import emit
+
+
+def _loc(obj) -> int:
+    src = inspect.getsource(obj)
+    return sum(1 for l in src.splitlines()
+               if l.strip() and not l.strip().startswith("#"))
+
+
+def run() -> None:
+    from repro.core.passes import AsyncLoRAPass, LoRAFetch
+    from repro.diffusion import sampler
+    from repro.diffusion.serving import DiffusionBackbone
+
+    latent = _loc(sampler.latent_parallel_velocity)
+    emit("table3_latent_parallel_loc", latent,
+         f"{latent} LoC (adaptive: yes — scheduler picks k per batch); "
+         "paper lego=74, katz=92(no), xdit=68(no)")
+
+    # ControlNet parallelism = declaring the input deferred (1 line in the
+    # model) + the deferred-fetch consumption contract in the backbone
+    cn = _loc(DiffusionBackbone.setup_io)
+    emit("table3_controlnet_parallel_loc", cn,
+         f"{cn} LoC in the model decl (runtime machinery is generic); "
+         "paper lego=79, katz=127(no)")
+
+    lora = _loc(AsyncLoRAPass) + _loc(LoRAFetch)
+    emit("table3_async_lora_loc", lora,
+         f"{lora} LoC for the compiler pass + fetch op; workflow dev "
+         "writes 1 line (add_patch); paper lego=61, katz=182")

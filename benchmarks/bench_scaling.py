@@ -1,0 +1,18 @@
+"""Fig 3-left: loading time of whole-workflow scaling vs base-DM-only
+scaling.  Micro-serving loads only the bottleneck model (L1)."""
+
+from benchmarks.common import emit
+from repro.core.profiles import GPU_H800
+from repro.diffusion import FAMILIES
+
+
+def run() -> None:
+    hw = GPU_H800
+    for name in ("sd3", "sd3.5-large", "flux-schnell", "flux-dev"):
+        f = FAMILIES[name]
+        full = f.workflow_footprint() / hw.host_load_bw
+        dm = f.backbone_bytes() / hw.host_load_bw
+        emit(f"fig3_load_workflow[{name}]", full * 1e6,
+             f"footprint={f.workflow_footprint()/2**30:.1f}GiB")
+        emit(f"fig3_load_dm_only[{name}]", dm * 1e6,
+             f"reduction={100*(1-dm/full):.0f}%")

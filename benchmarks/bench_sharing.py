@@ -1,0 +1,43 @@
+"""Fig 4-left + §7.3: cross-workflow model sharing on 2 GPUs.
+
+A (basic, +ControlNet) workflow pair shares text encoder + backbone + VAE.
+Compare micro-serving (shared replicas) against isolated monolithic
+replicas: request latency and resident GPU memory."""
+
+from benchmarks.common import emit, run_lego_trace, run_mono_trace
+from repro.diffusion import FAMILIES, ModelSet, make_basic_workflow, make_controlnet_workflow
+from repro.sim import generate_trace, mean_latency
+
+
+def run() -> None:
+    for fam in ("sd3", "flux-dev"):
+        ms = ModelSet(FAMILIES[fam])
+        wfs = {}
+        for t in (make_basic_workflow(fam, ms), make_controlnet_workflow(fam, 1, ms)):
+            wfs[t.name] = t
+        trace = generate_trace(list(wfs), rate=0.6, duration=180, cv=1.5, seed=5)
+        lego = run_lego_trace(wfs, trace, 2, slo_scale=None, admission=False)
+        mono = run_mono_trace(wfs, trace, 2, "diffusers", slo_scale=None,
+                              admission=False)
+        l_lat = lego.mean_latency()
+        m_lat = sum((r.latency or 0) for r in mono.records if r.latency) / max(
+            1, sum(1 for r in mono.records if r.latency))
+        emit(f"fig4_sharing_latency[{fam}]", l_lat * 1e6,
+             f"reduction={100*(1-l_lat/m_lat):.0f}%")
+        # memory: bytes of DISTINCT models lego keeps resident to serve all
+        # variants vs the per-workflow replicas monolithic serving binds
+        distinct = {}
+        for e in lego.executors:
+            for mid, b in e.loaded.items():
+                distinct[mid] = b
+        lego_mem = sum(distinct.values())
+        mono_mem = sum(s.footprint_bytes for s in mono.specs.values())
+        emit(f"fig4_sharing_memory[{fam}]", lego_mem / 2**20,
+             f"reduction={100*(1-lego_mem/mono_mem):.0f}%")
+        # §7.3: LoRA patch swap vs fresh model load
+        hw = lego.profiles.hw
+        lora_bytes = 886 * 2**20
+        swap = hw.patch_swap_time + lora_bytes / hw.remote_bw * 0
+        load = FAMILIES[fam].backbone_bytes() / hw.host_load_bw
+        emit(f"s73_patch_swap[{fam}]", swap * 1e6,
+             f"saves={FAMILIES[fam].backbone_bytes()/2**30:.1f}GiB+{load:.2f}s")

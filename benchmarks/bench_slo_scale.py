@@ -1,0 +1,25 @@
+"""Fig 9 (g): SLO attainment vs SLO scale (S6, 16 GPUs, rate 1.0)."""
+
+from benchmarks.common import emit, run_lego_trace, run_mono_trace
+from repro.diffusion import table2_setting
+from repro.sim import generate_trace
+
+
+def run() -> None:
+    wfs = table2_setting("s6")
+    trace = generate_trace(list(wfs), rate=1.0, duration=240, cv=2.0, seed=13)
+    first_lego_90 = None
+    first_s_90 = None
+    for scale in (1.0, 2.0, 4.0, 8.0, 12.0):
+        lego = run_lego_trace(wfs, trace, 16, slo_scale=scale).slo_attainment()
+        s = run_mono_trace(wfs, trace, 16, "diffusers-s", slo_scale=scale
+                           ).slo_attainment()
+        if first_lego_90 is None and lego >= 0.9:
+            first_lego_90 = scale
+        if first_s_90 is None and s >= 0.9:
+            first_s_90 = scale
+        emit(f"fig9g_slo_scale[{scale}]", scale * 1e6,
+             f"lego={lego:.2f};diffusers-s={s:.2f}")
+    if first_lego_90 and first_s_90:
+        emit("fig9g_stringency_ratio", first_lego_90 * 1e6,
+             f"{first_s_90/first_lego_90:.1f}x more stringent SLO satisfied")

@@ -1,0 +1,24 @@
+"""Fig 9 (a)-(f): SLO attainment vs request rate, settings S1-S6,
+LegoDiffusion vs Diffusers / Diffusers-C / Diffusers-S."""
+
+from benchmarks.common import attainment_at, emit, max_rate_at_target
+from repro.diffusion import table2_setting
+
+GPUS = {"s1": 8, "s2": 8, "s3": 8, "s4": 8, "s5": 16, "s6": 16}
+
+
+def run(settings=("s1", "s2", "s3", "s4", "s5", "s6"),
+        rates=(0.5, 1.0, 2.0, 4.0)) -> None:
+    for s in settings:
+        wfs = table2_setting(s)
+        n = GPUS[s]
+        for rate in rates:
+            a = attainment_at(wfs, rate, n, cv=2.0, slo=2.0)
+            emit(f"fig9_rate[{s},r={rate}]", rate * 1e6,
+                 f"lego={a['lego']:.2f};S={a['diffusers-s']:.2f};"
+                 f"C={a['diffusers-c']:.2f};D={a['diffusers']:.2f}")
+        lego_max = max_rate_at_target(wfs, n, 2.0, 2.0, system="lego")
+        s_max = max_rate_at_target(wfs, n, 2.0, 2.0, system="diffusers-s")
+        ratio = lego_max / s_max if s_max else float("inf")
+        emit(f"fig9_sustained_rate_ratio[{s}]", lego_max * 1e6,
+             f"lego={lego_max};diffusers-s={s_max};ratio={ratio:.1f}x")

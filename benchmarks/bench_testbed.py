@@ -1,0 +1,24 @@
+"""Fig 9 (i): SLO attainment vs testbed size (S6, rate 0.5, SLO 2.0) —
+how many GPUs each system needs for 90% attainment."""
+
+from benchmarks.common import emit, run_lego_trace, run_mono_trace
+from repro.diffusion import table2_setting
+from repro.sim import generate_trace
+
+
+def run() -> None:
+    wfs = table2_setting("s6")
+    trace = generate_trace(list(wfs), rate=0.5, duration=240, cv=2.0, seed=19)
+    lego_need = None
+    s_need = None
+    for n in (8, 12, 16, 24, 32):
+        lego = run_lego_trace(wfs, trace, n, slo_scale=2.0).slo_attainment()
+        s = run_mono_trace(wfs, trace, n, "diffusers-s", 2.0).slo_attainment()
+        if lego_need is None and lego >= 0.9:
+            lego_need = n
+        if s_need is None and s >= 0.9:
+            s_need = n
+        emit(f"fig9i_testbed[{n}]", n * 1e6, f"lego={lego:.2f};diffusers-s={s:.2f}")
+    emit("fig9i_gpu_reduction", (lego_need or 32) * 1e6,
+         f"lego_needs={lego_need};diffusers-s_needs={s_need or '>32'};"
+         + (f"ratio={s_need/lego_need:.1f}x" if lego_need and s_need else "ratio=>%.1fx" % (32/(lego_need or 32))))

@@ -1,0 +1,142 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows via
+:func:`emit`; ``us_per_call`` is the benchmark's primary latency-like
+quantity in microseconds (or the sim wall quantity it measures), and
+``derived`` carries the paper-comparable ratio/percentage.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any, Dict, Iterable, List, Optional
+
+from repro.core import (
+    AdmissionController,
+    GraphCompiler,
+    ProfileStore,
+    Scheduler,
+    ServingSystem,
+)
+from repro.core.profiles import GPU_H800
+from repro.diffusion import table2_setting
+from repro.sim import MonolithicSystem, WorkflowSpec, generate_trace
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def build_lego(
+    workflows: Dict[str, Any],
+    n_executors: int,
+    admission: bool = True,
+    scheduler: Optional[Scheduler] = None,
+    scheduler_kwargs: Optional[Dict[str, Any]] = None,
+) -> ServingSystem:
+    sys_ = ServingSystem(
+        n_executors=n_executors, admission_enabled=admission, scheduler=scheduler
+    )
+    if scheduler_kwargs:
+        sys_.coordinator.scheduler = Scheduler(sys_.profiles, **scheduler_kwargs)
+    for t in workflows.values():
+        sys_.register(t)
+    return sys_
+
+
+def canonical_solo(workflows: Dict[str, Any]) -> Dict[str, float]:
+    """One solo latency per workflow, shared by ALL systems (paper §7.1:
+    the deadline is a property of the workflow, not of the serving
+    system): the monolithic single-request serial latency."""
+    profiles = ProfileStore(GPU_H800)
+    reg = ServingSystem(n_executors=1)
+    for t in workflows.values():
+        reg.register(t)
+    return {
+        n: WorkflowSpec.from_graph(reg.registry.instantiate(n), profiles)
+        .serial_seconds_b1
+        for n in workflows
+    }
+
+
+def run_lego_trace(
+    workflows: Dict[str, Any],
+    trace,
+    n_executors: int,
+    slo_scale: Optional[float] = 2.0,
+    admission: bool = True,
+    scheduler: Optional[Scheduler] = None,
+    scheduler_kwargs: Optional[Dict[str, Any]] = None,
+    solo: Optional[Dict[str, float]] = None,
+) -> ServingSystem:
+    sys_ = build_lego(workflows, n_executors, admission, scheduler,
+                      scheduler_kwargs)
+    solo = solo or canonical_solo(workflows)
+    for tr in trace:
+        sys_.submit(
+            tr.workflow, inputs=tr.inputs, arrival=tr.arrival,
+            slo_seconds=None if slo_scale is None else slo_scale * solo[tr.workflow],
+        )
+    sys_.run()
+    return sys_
+
+
+def build_mono(
+    workflows: Dict[str, Any], n_gpus: int, mode: str, admission: bool = True
+) -> MonolithicSystem:
+    profiles = ProfileStore(GPU_H800)
+    reg = ServingSystem(n_executors=1)
+    for t in workflows.values():
+        reg.register(t)
+    specs = {
+        n: WorkflowSpec.from_graph(reg.registry.instantiate(n), profiles)
+        for n in workflows
+    }
+    return MonolithicSystem(n_gpus, profiles, specs, mode=mode, admission=admission)
+
+
+def run_mono_trace(
+    workflows: Dict[str, Any],
+    trace,
+    n_gpus: int,
+    mode: str,
+    slo_scale: Optional[float] = 2.0,
+    admission: bool = True,
+) -> MonolithicSystem:
+    m = build_mono(workflows, n_gpus, mode, admission)
+    solo = {n: m.specs[n].serial_seconds_b1 for n in workflows}
+    for tr in trace:
+        m.submit(tr.arrival, tr.workflow,
+                 None if slo_scale is None else slo_scale * solo[tr.workflow])
+    m.run()
+    return m
+
+
+def attainment_at(workflows, rate: float, n: int, cv: float, slo: float,
+                  duration: float = 180.0, seed: int = 7) -> Dict[str, float]:
+    """Attainment of lego + the three baselines on one trace."""
+    trace = generate_trace(list(workflows), rate=rate, duration=duration,
+                           cv=cv, seed=seed)
+    out = {"n_requests": float(len(trace))}
+    out["lego"] = run_lego_trace(workflows, trace, n, slo).slo_attainment()
+    for mode in ("diffusers", "diffusers-c", "diffusers-s"):
+        out[mode] = run_mono_trace(workflows, trace, n, mode, slo).slo_attainment()
+    return out
+
+
+def max_rate_at_target(workflows, n: int, cv: float, slo: float,
+                       target: float = 0.9, rates: Iterable[float] = None,
+                       system: str = "lego") -> float:
+    """Highest swept rate sustaining `target` attainment."""
+    rates = list(rates or (0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0))
+    best = 0.0
+    for r in rates:
+        trace = generate_trace(list(workflows), rate=r, duration=180, cv=cv, seed=11)
+        if system == "lego":
+            a = run_lego_trace(workflows, trace, n, slo).slo_attainment()
+        else:
+            a = run_mono_trace(workflows, trace, n, system, slo).slo_attainment()
+        if a >= target:
+            best = r
+    return best

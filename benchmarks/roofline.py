@@ -1,0 +1,62 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run
+artifacts (dryrun_results.json).  See EXPERIMENTS.md for the narrative."""
+
+import json
+import os
+
+from benchmarks.common import emit
+
+CHIPS = 256
+PEAK = 197e12          # bf16 FLOP/s per v5e chip
+HBM = 819e9            # B/s
+ICI = 50e9             # B/s per link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def terms(rec):
+    """Three roofline terms in seconds.  Dynamic HLO costs are
+    PER-PARTITION (post-SPMD module x trip counts), so each term divides
+    by a single chip's capability."""
+    flops = rec.get("hlo_flops", 0.0)
+    byt = rec.get("hlo_bytes", 0.0)
+    coll = rec.get("collectives", {}).get("total", 0.0)
+    if rec.get("per_partition"):
+        t_c = flops / PEAK
+        t_m = byt / HBM
+        t_x = coll / ICI
+    else:
+        t_c = flops / (CHIPS * PEAK)
+        t_m = byt / (CHIPS * HBM)
+        t_x = coll / (CHIPS * ICI)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    return t_c, t_m, t_x, dom
+
+
+def model_flops(rec):
+    shape_tokens = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                    "decode_32k": 128, "long_500k": 1}
+    tok = shape_tokens[rec["shape"]]
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    return mult * rec["active_params"] * tok
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline", 0.0, "dryrun_results.json missing - run the dry-run")
+        return
+    data = json.load(open(RESULTS))
+    for rec in data:
+        if not rec.get("ok") or rec.get("mesh") != "16x16":
+            continue
+        t_c, t_m, t_x, dom = terms(rec)
+        mf = model_flops(rec)
+        total_hlo = rec.get("hlo_flops", 0.0) * (
+            CHIPS if rec.get("per_partition") else 1)
+        ratio = mf / total_hlo if total_hlo else 0.0
+        peak = (rec.get("bytes_per_device", {}) or {}).get("peak") or 0
+        emit(f"roofline[{rec['arch']},{rec['shape']}]",
+             max(t_c, t_m, t_x) * 1e6,
+             f"compute={t_c:.2e}s;memory={t_m:.2e}s;coll={t_x:.2e}s;"
+             f"dominant={dom};useful_flops_ratio={ratio:.2f};"
+             f"peak_mem={peak/2**30:.1f}GiB")

@@ -1,0 +1,3 @@
+"""Paper-own diffusion family config (Table 2): flux_dev."""
+
+from repro.diffusion.config import FLUX_DEV as CONFIG  # noqa: F401

@@ -1,0 +1,3 @@
+"""Paper-own diffusion family config (Table 2): flux_schnell."""
+
+from repro.diffusion.config import FLUX_SCHNELL as CONFIG  # noqa: F401

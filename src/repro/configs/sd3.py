@@ -1,0 +1,3 @@
+"""Paper-own diffusion family config (Table 2): sd3."""
+
+from repro.diffusion.config import SD3 as CONFIG  # noqa: F401

@@ -1,0 +1,3 @@
+"""Paper-own diffusion family config (Table 2): sdxl."""
+
+from repro.diffusion.config import SDXL as CONFIG  # noqa: F401

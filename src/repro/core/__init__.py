@@ -1,0 +1,37 @@
+"""LegoDiffusion core: micro-serving of diffusion workflows in JAX.
+
+Public surface:
+
+* DSL      -- Model, Workflow, compose
+* Compiler -- GraphCompiler, optimization passes
+* Runtime  -- Coordinator, ServingSystem
+* Policy   -- Scheduler, AdmissionController
+"""
+
+from repro.core.admission import AdmissionController, critical_path_seconds
+from repro.core.compiler import CompiledGraph, CompileError, GraphCompiler, Pass
+from repro.core.datastore import DataEngine, FetchFuture
+from repro.core.executor import Executor, LocalBackend, OutOfMemory
+from repro.core.model import Model, ModelCost
+from repro.core.passes import (
+    ApproximateCachingPass,
+    AsyncLoRAPass,
+    DeadCodeEliminationPass,
+    InlineTrivialPass,
+    JitCompilePass,
+    default_passes,
+)
+from repro.core.profiles import GPU_H800, TPU_V5E, HardwareSpec, LatencyProfile, ProfileStore
+from repro.core.registry import ServingSystem, WorkflowRegistry
+from repro.core.runtime import Coordinator, Request, RequestNode
+from repro.core.scheduler import ScheduledBatch, Scheduler
+from repro.core.types import (
+    DataRef,
+    Image,
+    Port,
+    TensorType,
+    ValueRef,
+    WorkflowTypeError,
+)
+from repro.core.workflow import Workflow, WorkflowContext, WorkflowNode, WorkflowTemplate, compose
+from repro.core.group import CoordinatorGroup, cluster_workflows

@@ -1,0 +1,171 @@
+"""Distributed data engine (§4.3.2).
+
+Per-executor data stores with coordinator-tracked placement metadata.  The
+paper builds this on NVSHMEM one-sided GPU transfers; on TPU there is no
+one-sided RDMA analogue, so the engine is an explicit object store whose
+transfer costs are modeled with ICI/DCN bandwidth (see DESIGN.md §3).  In
+the executable plane the store holds real JAX arrays; in the simulation
+plane only byte counts move.
+
+Key properties carried over from the paper:
+
+* tensors are **immutable**: produced once, consumed, never updated — no
+  consistency protocol needed;
+* **metadata is tiny** (key + nbytes + placement) and piggybacks on
+  node-completion notifications;
+* values are **reference-counted** and reclaimed as soon as no downstream
+  consumer remains;
+* **lineage** (producer node id) supports recovery by re-execution when an
+  executor fails.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+
+@dataclasses.dataclass
+class StoredValue:
+    key: str
+    nbytes: int
+    placements: Set[int]                 # executor ids holding a copy
+    producer_node: Optional[str] = None  # lineage (request-scoped node uid)
+    refcount: int = 0
+    value: Any = None                    # real payload (executable plane)
+
+
+class FetchFuture:
+    """Resolution handle for a *deferred* input (§4.3.2).
+
+    A deferred input is a fetch function invoked at the point of
+    consumption: returns immediately if the data is available, or blocks
+    (in simulation: completes the consuming node later) until it arrives.
+    """
+
+    def __init__(self, key: str) -> None:
+        self.key = key
+        self.ready_time: Optional[float] = None
+        self.value: Any = None
+
+    @property
+    def is_ready(self) -> bool:
+        return self.ready_time is not None
+
+    def resolve(self, time: float, value: Any = None) -> None:
+        self.ready_time = time
+        self.value = value
+
+
+class DataEngine:
+    """Coordinator-side view of all executor-local data stores."""
+
+    def __init__(self, profiles: Any, pod_of: Optional[Dict[int, int]] = None) -> None:
+        self.profiles = profiles
+        self._store: Dict[str, StoredValue] = {}
+        self.pod_of = pod_of or {}
+        self.bytes_transferred: float = 0.0
+        self.num_transfers: int = 0
+        self.num_local_hits: int = 0
+
+    # --------------------------------------------------------------- puts
+    def put(
+        self,
+        key: str,
+        executor_id: Optional[int],
+        nbytes: int,
+        value: Any = None,
+        producer_node: Optional[str] = None,
+        refcount: int = 0,
+    ) -> StoredValue:
+        sv = StoredValue(
+            key=key,
+            nbytes=int(nbytes),
+            placements={executor_id} if executor_id is not None else set(),
+            producer_node=producer_node,
+            refcount=refcount,
+            value=value,
+        )
+        self._store[key] = sv
+        return sv
+
+    def exists(self, key: str) -> bool:
+        return key in self._store
+
+    def get(self, key: str) -> StoredValue:
+        return self._store[key]
+
+    def value_of(self, key: str) -> Any:
+        return self._store[key].value
+
+    # ------------------------------------------------------------- fetches
+    def fetch_cost(self, key: str, to_executor: int) -> float:
+        """Seconds to make ``key`` local to ``to_executor`` (0 if local)."""
+        sv = self._store[key]
+        if to_executor in sv.placements or not sv.placements:
+            return 0.0
+        src = next(iter(sv.placements))
+        cross_pod = (
+            self.pod_of.get(src, 0) != self.pod_of.get(to_executor, 0)
+        )
+        return self.profiles.transfer_time(sv.nbytes, cross_pod=cross_pod)
+
+    def fetch(self, key: str, to_executor: int) -> float:
+        """Perform (account) the fetch; returns modeled seconds."""
+        sv = self._store[key]
+        if to_executor in sv.placements or not sv.placements:
+            self.num_local_hits += 1
+            return 0.0
+        cost = self.fetch_cost(key, to_executor)
+        sv.placements.add(to_executor)
+        self.bytes_transferred += sv.nbytes
+        self.num_transfers += 1
+        return cost
+
+    def batch_fetch_cost(self, keys: List[str], to_executor: int) -> float:
+        """Transfers from distinct sources overlap; same-source serialize."""
+        per_source: Dict[Optional[int], float] = {}
+        for k in keys:
+            sv = self._store.get(k)
+            if sv is None or to_executor in sv.placements or not sv.placements:
+                continue
+            src = next(iter(sv.placements))
+            per_source[src] = per_source.get(src, 0.0) + self.fetch_cost(k, to_executor)
+        return max(per_source.values(), default=0.0)
+
+    # ---------------------------------------------------------------- GC
+    def addref(self, key: str, n: int = 1) -> None:
+        self._store[key].refcount += n
+
+    def release(self, key: str) -> None:
+        sv = self._store.get(key)
+        if sv is None:
+            return
+        sv.refcount -= 1
+        if sv.refcount <= 0:
+            del self._store[key]
+
+    def pin(self, key: str) -> None:
+        """Keep a value alive regardless of refcounts (workflow outputs)."""
+        self._store[key].refcount += 10**9
+
+    # ------------------------------------------------------------ failure
+    def executor_lost(self, executor_id: int) -> List[Tuple[str, Optional[str]]]:
+        """Drop placements on a dead executor; return (key, lineage) for
+        values that now have no live copy and must be recomputed."""
+        lost: List[Tuple[str, Optional[str]]] = []
+        for key, sv in list(self._store.items()):
+            if executor_id in sv.placements:
+                sv.placements.discard(executor_id)
+                if not sv.placements:
+                    lost.append((key, sv.producer_node))
+                    del self._store[key]
+        return lost
+
+    # ------------------------------------------------------------- stats
+    @property
+    def live_bytes(self) -> int:
+        return sum(sv.nbytes * max(1, len(sv.placements)) for sv in self._store.values())
+
+    def __len__(self) -> int:
+        return len(self._store)

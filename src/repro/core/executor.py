@@ -1,0 +1,150 @@
+"""Executors — one device each, with a model cache (§4, Fig. 5).
+
+An executor owns one accelerator.  It tracks which models are resident in
+device memory (the coordinator mirrors this in its *model state table*),
+evicts idle models LRU-style under memory pressure, and carries
+per-request patch state (which LoRA is currently folded into a resident
+base model).
+
+Two backends share this class:
+
+* **simulated** (default) — execution is a duration from the profiles;
+* **local** (:class:`LocalBackend`) — `load()`/`execute()` actually run on
+  the host JAX device, used by the executable examples and overhead
+  benchmarks.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.model import Model
+from repro.core.profiles import ProfileStore
+
+
+class OutOfMemory(RuntimeError):
+    pass
+
+
+class Executor:
+    def __init__(
+        self,
+        executor_id: int,
+        profiles: ProfileStore,
+        memory_capacity: Optional[float] = None,
+        pod: int = 0,
+    ) -> None:
+        self.id = executor_id
+        self.profiles = profiles
+        self.capacity = memory_capacity or profiles.hw.hbm_capacity
+        self.pod = pod
+        # model_id -> bytes, in LRU order (most-recent last)
+        self.loaded: "OrderedDict[str, float]" = OrderedDict()
+        # model_id -> list of patch model_ids currently folded in
+        self.patch_state: Dict[str, List[str]] = {}
+        self.busy_until: float = 0.0
+        self.alive: bool = True
+        # accounting
+        self.busy_time: float = 0.0
+        self.models_loaded_count: int = 0
+        self.bytes_loaded: float = 0.0
+
+    # ------------------------------------------------------------- memory
+    @property
+    def used_memory(self) -> float:
+        return sum(self.loaded.values())
+
+    def has_model(self, model_id: str) -> bool:
+        return model_id in self.loaded
+
+    def touch(self, model_id: str) -> None:
+        if model_id in self.loaded:
+            self.loaded.move_to_end(model_id)
+
+    def can_fit(self, nbytes: float) -> bool:
+        return self.used_memory + nbytes <= self.capacity
+
+    def ensure_capacity(self, nbytes: float, protected: Optional[set] = None) -> List[str]:
+        """Evict LRU models until ``nbytes`` fits; returns evicted ids."""
+        protected = protected or set()
+        evicted: List[str] = []
+        while self.used_memory + nbytes > self.capacity:
+            victim = None
+            for mid in self.loaded:  # LRU first
+                if mid not in protected:
+                    victim = mid
+                    break
+            if victim is None:
+                raise OutOfMemory(
+                    f"executor {self.id}: cannot fit {nbytes/2**30:.2f} GiB "
+                    f"(used {self.used_memory/2**30:.2f}/{self.capacity/2**30:.2f} GiB)"
+                )
+            del self.loaded[victim]
+            self.patch_state.pop(victim, None)
+            evicted.append(victim)
+        return evicted
+
+    def mark_loaded(self, model_id: str, nbytes: float) -> None:
+        self.ensure_capacity(nbytes, protected=set(self.loaded))
+        self.loaded[model_id] = nbytes
+        self.loaded.move_to_end(model_id)
+        self.models_loaded_count += 1
+        self.bytes_loaded += nbytes
+
+    # ------------------------------------------------------------ patches
+    def patches_on(self, model_id: str) -> List[str]:
+        return self.patch_state.get(model_id, [])
+
+    def set_patches(self, model_id: str, patch_ids: List[str]) -> None:
+        self.patch_state[model_id] = list(patch_ids)
+
+    # ------------------------------------------------------------ timeline
+    def is_free(self, now: float) -> bool:
+        return self.alive and self.busy_until <= now
+
+    def occupy(self, now: float, duration: float) -> float:
+        start = max(now, self.busy_until)
+        self.busy_until = start + duration
+        self.busy_time += duration
+        return self.busy_until
+
+    def fail(self) -> None:
+        self.alive = False
+        self.loaded.clear()
+        self.patch_state.clear()
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"<Executor {self.id} pod={self.pod} "
+            f"models={list(self.loaded)} busy_until={self.busy_until:.3f}>"
+        )
+
+
+class LocalBackend:
+    """Really-execute backend: loads params and runs ``Model.execute`` on
+    the host JAX device.  Used by the executable plane."""
+
+    def __init__(self) -> None:
+        self._components: Dict[str, Dict[str, Any]] = {}
+
+    def ensure_loaded(self, model: Model) -> Tuple[Dict[str, Any], float]:
+        """Returns (components, measured load seconds — 0 if cached)."""
+        if model.model_id in self._components:
+            return self._components[model.model_id], 0.0
+        t0 = _time.perf_counter()
+        comps = model.load(device=None)
+        dt = _time.perf_counter() - t0
+        self._components[model.model_id] = comps
+        return comps, dt
+
+    def unload(self, model_id: str) -> None:
+        self._components.pop(model_id, None)
+
+    def execute(self, model: Model, **kwargs: Any) -> Tuple[Dict[str, Any], float]:
+        comps, _ = self.ensure_loaded(model)
+        t0 = _time.perf_counter()
+        out = model.execute(comps, **kwargs)
+        dt = _time.perf_counter() - t0
+        return out, dt

@@ -1,0 +1,199 @@
+"""The ``Model`` base class — the unit of micro-serving (§4.1).
+
+Model developers subclass :class:`Model` and implement exactly three
+methods — ``setup_io()``, ``load()``, ``execute()`` — plus optionally
+``cost()`` (used by the analytic latency profiles; see
+:mod:`repro.core.profiles`).  Workflow integration (``__call__`` tracing,
+patch bookkeeping) lives entirely in the base class, mirroring Fig. 6 of the
+paper.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, List, Optional
+
+from repro.core.types import (
+    Port,
+    PortType,
+    ValueRef,
+    WorkflowTypeError,
+    check_value,
+    type_name,
+    types_compatible,
+)
+
+
+class ModelCost:
+    """Static cost description used by analytic profiles and the roofline.
+
+    ``flops_per_item``  — FLOPs for one batch item at the model's nominal
+                          input size;
+    ``param_bytes``     — parameter footprint (what ``load()`` moves to HBM);
+    ``act_io_bytes``    — activation bytes read+written per item (memory
+                          roofline term);
+    ``output_bytes``    — bytes produced per item (data-engine transfers);
+    ``max_parallelism`` — ``k_max``: the maximum useful intra-node
+                          parallelism (§5.2), profiled offline;
+    ``max_batch``       — ``B_max``: profiled maximum useful batch (§5.1);
+    ``calls_per_request`` — how many times a single request invokes this
+                          model (e.g. #denoising steps for the backbone).
+    """
+
+    def __init__(
+        self,
+        flops_per_item: float,
+        param_bytes: float,
+        act_io_bytes: float,
+        output_bytes: float,
+        max_parallelism: int = 1,
+        max_batch: int = 8,
+        calls_per_request: int = 1,
+    ) -> None:
+        self.flops_per_item = float(flops_per_item)
+        self.param_bytes = float(param_bytes)
+        self.act_io_bytes = float(act_io_bytes)
+        self.output_bytes = float(output_bytes)
+        self.max_parallelism = int(max_parallelism)
+        self.max_batch = int(max_batch)
+        self.calls_per_request = int(calls_per_request)
+
+
+class Model(abc.ABC):
+    """Base class every servable model/adapter subclasses.
+
+    ``model_id`` identifies *loadable state*: two Model instances with the
+    same ``model_id`` are interchangeable for scheduling, which is what makes
+    cross-workflow model sharing possible (§5.1).
+    """
+
+    def __init__(self, model_id: Optional[str] = None, **kwargs: Any) -> None:
+        self.model_id: str = model_id or type(self).__name__
+        self.init_kwargs = dict(kwargs)
+        self._inputs: Dict[str, Port] = {}
+        self._outputs: Dict[str, Port] = {}
+        self._patches: List["Model"] = []
+        self.setup_io()
+
+    # ---------------------------------------------------------------- DSL
+    def add_input(self, name: str, data_type: PortType, deferred: bool = False) -> None:
+        self._inputs[name] = Port(name, data_type, deferred)
+
+    def add_output(self, name: str, data_type: PortType) -> None:
+        self._outputs[name] = Port(name, data_type)
+
+    @property
+    def inputs(self) -> Dict[str, Port]:
+        return self._inputs
+
+    @property
+    def outputs(self) -> Dict[str, Port]:
+        return self._outputs
+
+    # ------------------------------------------------------------ patches
+    def add_patch(self, patch: "Model") -> None:
+        """Attach a weight-patching adapter (LoRA-class, §2.1)."""
+        self._patches.append(patch)
+
+    def rm_patch(self, patch: "Model") -> None:
+        self._patches.remove(patch)
+
+    @property
+    def patches(self) -> List["Model"]:
+        return list(self._patches)
+
+    # ----------------------------------------------------- tracing support
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        """Record a model invocation as a workflow node (Fig. 6 lines 9-13).
+
+        Returns the node's output ``ValueRef``s — a single ref if the model
+        declares one output, else a dict of refs.
+        """
+        from repro.core.workflow import WorkflowContext, WorkflowNode
+
+        workflow = WorkflowContext.get_current_workflow()
+        if workflow is None:
+            raise RuntimeError(
+                f"{self.model_id} called outside of a Workflow scope; "
+                "model invocations must happen while composing a workflow"
+            )
+        bound = self._bind_arguments(args, kwargs)
+        self._typecheck_call(bound)
+        node = WorkflowNode(op=self, inputs=bound)
+        workflow.add_workflow_node(node)
+        return node.get_outputs()
+
+    def _bind_arguments(self, args: Any, kwargs: Dict[str, Any]) -> Dict[str, Any]:
+        names = list(self._inputs.keys())
+        bound: Dict[str, Any] = {}
+        if len(args) > len(names):
+            raise WorkflowTypeError(
+                f"{self.model_id}: got {len(args)} positional args but "
+                f"declares only {len(names)} inputs {names}"
+            )
+        for name, value in zip(names, args):
+            bound[name] = value
+        for name, value in kwargs.items():
+            if name in bound:
+                raise WorkflowTypeError(
+                    f"{self.model_id}: input '{name}' given positionally and by keyword"
+                )
+            bound[name] = value
+        return bound
+
+    def _typecheck_call(self, bound: Dict[str, Any]) -> None:
+        for name, value in bound.items():
+            port = self._inputs.get(name)
+            if port is None:
+                raise WorkflowTypeError(
+                    f"{self.model_id}: unknown input '{name}' "
+                    f"(declared: {sorted(self._inputs)})"
+                )
+            if isinstance(value, ValueRef):
+                if not types_compatible(value.type, port.type):
+                    raise WorkflowTypeError(
+                        f"{self.model_id}.{name}: producer type "
+                        f"{type_name(value.type)} incompatible with declared "
+                        f"{type_name(port.type)}"
+                    )
+            elif value is not None:
+                if not check_value(port.type, value):
+                    raise WorkflowTypeError(
+                        f"{self.model_id}.{name}: literal {value!r} does not "
+                        f"satisfy declared type {type_name(port.type)}"
+                    )
+        for name, port in self._inputs.items():
+            if name not in bound and not port.deferred:
+                raise WorkflowTypeError(
+                    f"{self.model_id}: missing required input '{name}'"
+                )
+
+    # -------------------------------------------------------- to implement
+    @abc.abstractmethod
+    def setup_io(self) -> None:
+        """Declare typed inputs/outputs via add_input()/add_output()."""
+
+    def load(self, device: Any = None) -> Dict[str, Any]:
+        """Initialize model state on a device; returns components dict."""
+        return {}
+
+    def execute(self, model_components: Dict[str, Any], **kwargs: Any) -> Dict[str, Any]:
+        """Run inference.  Must return a dict keyed by declared outputs."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ costing
+    def cost(self) -> ModelCost:
+        """Analytic cost description (overridden by real models)."""
+        return ModelCost(
+            flops_per_item=1e9,
+            param_bytes=1e8,
+            act_io_bytes=1e7,
+            output_bytes=1e6,
+        )
+
+    # Is this a lightweight operator (scheduler may run it inline on the
+    # coordinator instead of dispatching to an executor)?
+    trivial: bool = False
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<{type(self).__name__} id={self.model_id}>"

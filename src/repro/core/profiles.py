@@ -1,0 +1,176 @@
+"""Per-model latency profiles (§5, "collected offline").
+
+The paper's scheduler consumes stable offline estimates of data-fetch time,
+model-loading time and inference time per (model, batch, parallelism).  On
+real hardware these come from measurement; here they come from an *analytic
+roofline model* over each model's :class:`~repro.core.model.ModelCost` and a
+:class:`HardwareSpec` — the same three-term structure (compute / memory /
+collective) we use in the roofline analysis.  Measured profiles can be
+plugged in via :meth:`ProfileStore.override`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.core.model import Model, ModelCost
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float          # bf16 FLOP/s per chip
+    hbm_bw: float              # bytes/s
+    hbm_capacity: float        # bytes
+    ici_bw: float              # bytes/s per link (device<->device)
+    host_load_bw: float        # bytes/s host->device (model loading)
+    dcn_bw: float              # bytes/s per host, cross-pod
+    dispatch_overhead: float   # s fixed per node execution
+    transfer_latency: float    # s fixed per inter-device transfer
+    remote_bw: float = 2e9     # bytes/s remote adapter storage (LoRA fetch)
+    patch_swap_time: float = 0.05  # s to hot-patch adapter weights in HBM
+
+
+# TPU v5e — the target chip for the roofline analysis (system prompt consts).
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    hbm_capacity=16 * 2**30,
+    ici_bw=50e9,
+    host_load_bw=32e9,
+    dcn_bw=25e9,
+    dispatch_overhead=120e-6,
+    transfer_latency=10e-6,
+)
+
+# H800-like — mirrors the paper's testbed for the serving simulation so that
+# absolute latencies land in the paper's 2-20 s/request regime.
+GPU_H800 = HardwareSpec(
+    name="gpu-h800",
+    peak_flops=990e12,
+    hbm_bw=3.35e12,
+    hbm_capacity=80 * 2**30,
+    ici_bw=200e9,            # NVLink effective per-peer
+    host_load_bw=25e9,       # PCIe gen5 effective
+    dcn_bw=25e9,
+    dispatch_overhead=100e-6,
+    transfer_latency=10e-6,
+)
+
+
+class LatencyProfile:
+    """Analytic (model × batch × parallelism) → seconds estimates."""
+
+    def __init__(self, model_id: str, cost: ModelCost, hw: HardwareSpec) -> None:
+        self.model_id = model_id
+        self.cost = cost
+        self.hw = hw
+        self._eff_max_batch = None
+
+    # Amdahl: fraction of a model call that latent/sequence parallelism
+    # cannot split (embeddings, final projection, per-step barriers) —
+    # yields the ~1.9x max speedup at k=2 the paper measures (Fig 10)
+    SERIAL_FRACTION = 0.05
+
+    # -------------------------------------------------------------- terms
+    def compute_term(self, batch: int, k: int = 1) -> float:
+        # MXU efficiency ~0.6 of peak for well-tiled matmuls
+        t = (batch * self.cost.flops_per_item) / (0.6 * self.hw.peak_flops)
+        if k <= 1:
+            return t
+        return t * (self.SERIAL_FRACTION + (1 - self.SERIAL_FRACTION) / k)
+
+    def memory_term(self, batch: int, k: int = 1) -> float:
+        # latent parallelism replicates the weights on every participant
+        # (CFG branches are data-parallel, not tensor-parallel)
+        bytes_moved = self.cost.param_bytes + batch * self.cost.act_io_bytes / k
+        return bytes_moved / self.hw.hbm_bw
+
+    def collective_term(self, batch: int, k: int = 1) -> float:
+        if k <= 1:
+            return 0.0
+        # per-call scatter/gather of the activations across k peers
+        sync_bytes = batch * self.cost.output_bytes * (k - 1) / k
+        return sync_bytes / self.hw.ici_bw + self.hw.transfer_latency * 2
+
+    # ------------------------------------------------------------ queries
+    def infer_time(self, batch: int, k: int = 1) -> float:
+        k = max(1, min(k, self.cost.max_parallelism))
+        t = max(self.compute_term(batch, k), self.memory_term(batch, k))
+        return t + self.collective_term(batch, k) + self.hw.dispatch_overhead
+
+    def speedup(self, batch: int, k: int) -> float:
+        return self.infer_time(batch, 1) / self.infer_time(batch, k)
+
+    def load_time(self) -> float:
+        if self.cost.param_bytes <= 0:
+            return 0.0
+        return self.cost.param_bytes / self.hw.host_load_bw + 0.01
+
+    def fetch_time(self, nbytes: float, cross_pod: bool = False) -> float:
+        bw = self.hw.dcn_bw if cross_pod else self.hw.ici_bw
+        return nbytes / bw + self.hw.transfer_latency
+
+    @property
+    def max_batch(self) -> int:
+        """PROFILED B_max (§5.1): largest batch whose throughput gain over
+        sequential service is >=1.25x.  Compute-bound models (diffusion
+        backbones) profile to B_max=1 — batching them multiplies latency
+        with no throughput gain; memory-bound models (text encoders)
+        profile to large batches."""
+        if self._eff_max_batch is None:
+            t1 = self.infer_time(1, 1)
+            best = 1
+            b = 2
+            while b <= self.cost.max_batch:
+                if self.infer_time(b, 1) <= 0.8 * b * t1:
+                    best = b
+                else:
+                    break
+                b *= 2
+            self._eff_max_batch = best
+        return self._eff_max_batch
+
+    @property
+    def max_parallelism(self) -> int:
+        return self.cost.max_parallelism
+
+    @property
+    def param_bytes(self) -> float:
+        return self.cost.param_bytes
+
+
+class ProfileStore:
+    """Registry of latency profiles keyed by model_id."""
+
+    def __init__(self, hw: HardwareSpec = GPU_H800) -> None:
+        self.hw = hw
+        self._profiles: Dict[str, LatencyProfile] = {}
+        self._overrides: Dict[str, LatencyProfile] = {}
+
+    def profile_model(self, model: Model) -> LatencyProfile:
+        if model.model_id in self._overrides:
+            return self._overrides[model.model_id]
+        if model.model_id not in self._profiles:
+            self._profiles[model.model_id] = LatencyProfile(
+                model.model_id, model.cost(), self.hw
+            )
+        return self._profiles[model.model_id]
+
+    def get(self, model_id: str) -> LatencyProfile:
+        if model_id in self._overrides:
+            return self._overrides[model_id]
+        return self._profiles[model_id]
+
+    def override(self, model_id: str, profile: LatencyProfile) -> None:
+        """Install a measured profile in place of the analytic one."""
+        self._overrides[model_id] = profile
+
+    def known(self, model_id: str) -> bool:
+        return model_id in self._profiles or model_id in self._overrides
+
+    def transfer_time(self, nbytes: float, cross_pod: bool = False) -> float:
+        bw = self.hw.dcn_bw if cross_pod else self.hw.ici_bw
+        return nbytes / bw + self.hw.transfer_latency

@@ -1,0 +1,109 @@
+"""Workflow registration + the assembled serving system (Fig. 5).
+
+``ServingSystem`` wires the frontend (workflow registration/invocation) to
+the backend (compiler → scheduler → executors → data engine).  It is what
+benchmarks and examples instantiate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.admission import AdmissionController
+from repro.core.compiler import CompiledGraph, GraphCompiler, Pass
+from repro.core.executor import Executor, LocalBackend
+from repro.core.passes import default_passes
+from repro.core.profiles import GPU_H800, HardwareSpec, ProfileStore
+from repro.core.runtime import Coordinator, Request
+from repro.core.scheduler import Scheduler
+from repro.core.workflow import WorkflowTemplate
+
+
+class WorkflowRegistry:
+    def __init__(self, compiler: Optional[GraphCompiler] = None) -> None:
+        self.compiler = compiler or GraphCompiler(default_passes())
+        self._templates: Dict[str, WorkflowTemplate] = {}
+        self._graph_cache: Dict[Any, CompiledGraph] = {}
+
+    def register(self, template: WorkflowTemplate) -> None:
+        self._templates[template.name] = template
+
+    def names(self) -> List[str]:
+        return sorted(self._templates)
+
+    def instantiate(self, name: str, **static_bindings: Any) -> CompiledGraph:
+        key = (name, tuple(sorted(static_bindings.items())))
+        if key not in self._graph_cache:
+            wf = self._templates[name].instantiate(**static_bindings)
+            self._graph_cache[key] = self.compiler.compile(wf)
+        return self._graph_cache[key]
+
+
+class ServingSystem:
+    """Coordinator + registry + executor fleet, ready to take requests."""
+
+    def __init__(
+        self,
+        n_executors: int = 8,
+        hw: HardwareSpec = GPU_H800,
+        scheduler: Optional[Scheduler] = None,
+        admission_enabled: bool = False,
+        extra_passes: Optional[Sequence[Pass]] = None,
+        backend: Optional[LocalBackend] = None,
+        pods: int = 1,
+        executor_memory: Optional[float] = None,
+    ) -> None:
+        self.profiles = ProfileStore(hw)
+        passes = default_passes()
+        if extra_passes:
+            passes = list(extra_passes) + passes
+        self.registry = WorkflowRegistry(GraphCompiler(passes))
+        per_pod = max(1, n_executors // pods)
+        executors = [
+            Executor(i, self.profiles, memory_capacity=executor_memory, pod=i // per_pod)
+            for i in range(n_executors)
+        ]
+        self.coordinator = Coordinator(
+            executors,
+            self.profiles,
+            scheduler=scheduler or Scheduler(self.profiles),
+            admission=AdmissionController(self.profiles, enabled=admission_enabled),
+            backend=backend,
+        )
+
+    # ---------------------------------------------------------------- API
+    def register(self, template: WorkflowTemplate) -> None:
+        self.registry.register(template)
+
+    def submit(
+        self,
+        workflow: str,
+        inputs: Optional[Dict[str, Any]] = None,
+        arrival: Optional[float] = None,
+        slo_seconds: Optional[float] = None,
+        **static_bindings: Any,
+    ) -> Request:
+        graph = self.registry.instantiate(workflow, **static_bindings)
+        return self.coordinator.submit(graph, inputs, arrival, slo_seconds)
+
+    def run(self, until: Optional[float] = None) -> None:
+        self.coordinator.run(until)
+
+    # ------------------------------------------------------------ metrics
+    @property
+    def executors(self) -> List[Executor]:
+        return self.coordinator.executors
+
+    def slo_attainment(self, include_rejected: bool = True) -> float:
+        return self.coordinator.slo_attainment(include_rejected)
+
+    def mean_latency(self) -> float:
+        return self.coordinator.mean_latency()
+
+    def solo_latency(self, workflow: str, **static_bindings: Any) -> float:
+        """Critical-path latency of one request on an idle cluster —
+        the paper's 'solo inference latency' used to set SLO deadlines."""
+        from repro.core.admission import critical_path_seconds
+
+        graph = self.registry.instantiate(workflow, **static_bindings)
+        return critical_path_seconds(graph, self.profiles)

@@ -1,0 +1,575 @@
+"""Micro-serving control plane (§4.3.1) — the coordinator.
+
+Runs the request-execution lifecycle over a discrete-event timeline:
+requests arrive → admission control → root nodes enqueue → dispatch loop
+(scheduler cycles) → executors report completions → downstream nodes become
+ready → … → workflow outputs returned.
+
+The same coordinator drives both planes:
+
+* **simulation** — durations come from analytic latency profiles, values
+  are byte counts (used for the paper's cluster-scale experiments);
+* **executable** — a :class:`~repro.core.executor.LocalBackend` really runs
+  ``Model.load/execute`` on the host JAX device and measured durations feed
+  the timeline (used by the examples and overhead benchmarks).
+
+Fault tolerance follows the paper: intermediate data is immutable with
+recorded lineage, so on executor failure the coordinator re-executes the
+producing nodes of lost values and requeues whatever was running there.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import time as _time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.admission import AdmissionController, critical_path_seconds
+from repro.core.compiler import CompiledGraph
+from repro.core.datastore import DataEngine
+from repro.core.executor import Executor, LocalBackend
+from repro.core.profiles import ProfileStore
+from repro.core.scheduler import ScheduledBatch, Scheduler
+from repro.core.types import ValueRef, nbytes_of
+
+PENDING, READY, RUNNING, AWAITING, DONE = "pending", "ready", "running", "awaiting", "done"
+
+_seq = itertools.count()
+
+
+class RequestNode:
+    """Per-request instantiation of a compiled workflow node."""
+
+    __slots__ = (
+        "request", "node", "uid", "state", "pending_eager", "deferred_arrivals",
+        "own_done_time", "executor_ids", "seq", "infer_est", "dispatch_time",
+    )
+
+    def __init__(self, request: "Request", node: Any, infer_est: float) -> None:
+        self.request = request
+        self.node = node
+        self.uid = f"{request.rid}:{node.id}"
+        self.state = PENDING
+        self.pending_eager = 0
+        # deferred input key -> arrival time (None until the fetch resolves)
+        self.deferred_arrivals: Dict[str, Optional[float]] = {}
+        self.own_done_time: Optional[float] = None
+        self.executor_ids: List[int] = []
+        self.seq = next(_seq)
+        self.infer_est = infer_est
+        self.dispatch_time: Optional[float] = None
+
+    # ---- scheduling views -------------------------------------------------
+    @property
+    def model_id(self) -> str:
+        return self.node.op.model_id
+
+    @property
+    def depth(self) -> int:
+        return self.request.graph.depth[self.node.id]
+
+    @property
+    def arrival_time(self) -> float:
+        return self.request.arrival
+
+    @property
+    def effective_patches(self) -> Tuple[str, ...]:
+        """Patches whose async fetch already resolved (Katz semantics:
+        early steps run unpatched; the adapter folds in when it arrives)."""
+        want = self.node.attrs.get("patch_ids")
+        if want is None:
+            # no AsyncLoRAPass ran: patches apply synchronously at dispatch
+            return tuple(p.model_id for p in self.node.op.patches)
+        checks = self.node.attrs.get("lora_check", [])
+        if all(c in self.request.lora_ready for c in checks):
+            return tuple(want)
+        return ()
+
+    @property
+    def batch_key(self) -> Tuple[str, Tuple[str, ...]]:
+        return (self.model_id, self.effective_patches)
+
+    def input_keys(self, eager_only: bool = True) -> List[str]:
+        refs = self.node.eager_input_refs() if eager_only else self.node.all_input_refs()
+        return [self.request.ref_key(r) for r in refs]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<RNode {self.uid} {self.model_id} {self.state}>"
+
+
+class Request:
+    def __init__(
+        self,
+        rid: int,
+        graph: CompiledGraph,
+        inputs: Dict[str, Any],
+        arrival: float,
+        slo_seconds: Optional[float],
+        profiles: ProfileStore,
+    ) -> None:
+        self.rid = rid
+        self.graph = graph
+        self.inputs = inputs
+        self.arrival = arrival
+        self.slo_seconds = slo_seconds
+        self.deadline = None if slo_seconds is None else arrival + slo_seconds
+        self.workflow_name = graph.name
+        self.nodes: Dict[int, RequestNode] = {}
+        self.remaining = 0
+        self.remaining_work = 0.0
+        self.completion: Optional[float] = None
+        self.status = "inflight"
+        self.lora_ready: set = set()      # fetch-node ids whose I/O completed
+        self.consumer_count: Dict[str, int] = {}
+        self.output_values: Dict[str, Any] = {}
+        for n in graph.nodes:
+            est = 0.0
+            if not (n.attrs.get("inline") or n.attrs.get("io_only")):
+                est = profiles.profile_model(n.op).infer_time(1, 1)
+            rn = RequestNode(self, n, est)
+            self.nodes[n.id] = rn
+            self.remaining += 1
+            self.remaining_work += est
+        # eager dependency counts + consumer refcounts
+        for n in graph.nodes:
+            rn = self.nodes[n.id]
+            for ref in n.eager_input_refs():
+                if ref.producer is not None:
+                    rn.pending_eager += 1
+            for ref in n.all_input_refs():
+                key = self.ref_key(ref)
+                self.consumer_count[key] = self.consumer_count.get(key, 0) + 1
+        self.pinned_keys = {self.ref_key(ref) for ref in graph.outputs.values()}
+
+    def ref_key(self, ref: ValueRef) -> str:
+        if ref.is_input:
+            return f"r{self.rid}:in:{ref.name}"
+        return f"r{self.rid}:n{ref.producer}:{ref.port}"
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.completion is None else self.completion - self.arrival
+
+    @property
+    def attained(self) -> Optional[bool]:
+        if self.completion is None or self.deadline is None:
+            return None
+        return self.completion <= self.deadline
+
+
+class Coordinator:
+    def __init__(
+        self,
+        executors: List[Executor],
+        profiles: ProfileStore,
+        scheduler: Optional[Scheduler] = None,
+        admission: Optional[AdmissionController] = None,
+        backend: Optional[LocalBackend] = None,
+    ) -> None:
+        self.executors = executors
+        self.by_id = {e.id: e for e in executors}
+        self.profiles = profiles
+        self.scheduler = scheduler or Scheduler(profiles)
+        self.admission = admission or AdmissionController(profiles, enabled=False)
+        self.backend = backend
+        self.engine = DataEngine(profiles, pod_of={e.id: e.pod for e in executors})
+        self.now = 0.0
+        self.events: List[Tuple[float, int, str, Any]] = []
+        self._ecount = itertools.count()
+        self.ready: List[RequestNode] = []
+        self.inflight: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self.rejected: List[Request] = []
+        self._rid = itertools.count()
+        self.control_plane_time = 0.0     # wall seconds spent in handlers
+        self.dispatch_log: List[ScheduledBatch] = []
+        self._adapters_cached: set = set()
+
+    # ----------------------------------------------------------- frontend
+    def submit(
+        self,
+        graph: CompiledGraph,
+        inputs: Optional[Dict[str, Any]] = None,
+        arrival: Optional[float] = None,
+        slo_seconds: Optional[float] = None,
+    ) -> Request:
+        rid = next(self._rid)
+        req = Request(rid, graph, inputs or {}, arrival if arrival is not None else self.now,
+                      slo_seconds, self.profiles)
+        self._push(req.arrival, "arrival", req)
+        return req
+
+    def fail_executor(self, executor_id: int, at: float) -> None:
+        self._push(at, "executor_fail", executor_id)
+
+    # -------------------------------------------------------------- engine
+    def _push(self, t: float, kind: str, payload: Any) -> None:
+        heapq.heappush(self.events, (t, next(self._ecount), kind, payload))
+
+    def run(self, until: Optional[float] = None) -> None:
+        while self.events:
+            t, _, kind, payload = self.events[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self.events)
+            self.now = max(self.now, t)
+            t0 = _time.perf_counter()
+            getattr(self, f"_on_{kind}")(payload)
+            self._schedule_cycle()
+            self.control_plane_time += _time.perf_counter() - t0
+
+    # -------------------------------------------------------------- events
+    def _on_arrival(self, req: Request) -> None:
+        backlog = sum(r.remaining_work for r in self.inflight.values())
+        alive = sum(1 for e in self.executors if e.alive)
+        if not self.admission.decide(self.now, req.graph, req.slo_seconds, backlog, alive):
+            req.status = "rejected"
+            self.rejected.append(req)
+            return
+        self.inflight[req.rid] = req
+        # materialize workflow inputs in the (frontend) data store
+        for name in req.graph.input_ports:
+            key = f"r{req.rid}:in:{name}"
+            value = req.inputs.get(name)
+            self.engine.put(
+                key, executor_id=None, nbytes=nbytes_of(value) if value is not None else 64,
+                value=value, refcount=req.consumer_count.get(key, 0) + 1,
+            )
+        for n in req.graph.nodes:
+            rn = req.nodes[n.id]
+            if rn.pending_eager == 0:
+                self._node_ready(rn)
+
+    def _on_io_done(self, rnode: RequestNode) -> None:
+        rnode.request.lora_ready.add(rnode.node.id)
+        self._complete_node(rnode, self.now)
+
+    def _on_batch_done(self, record: Dict[str, Any]) -> None:
+        batch: ScheduledBatch = record["batch"]
+        for rnode in batch.nodes:
+            if rnode.state != RUNNING:
+                continue  # e.g. requeued after executor failure
+            rnode.own_done_time = self.now
+            self._try_finish_running_node(rnode)
+
+    def _on_node_late_complete(self, rnode: RequestNode) -> None:
+        if rnode.state in (RUNNING, AWAITING):
+            self._complete_node(rnode, self.now)
+
+    def _on_executor_fail(self, executor_id: int) -> None:
+        ex = self.by_id[executor_id]
+        ex.fail()
+        # requeue nodes that were running there
+        for req in self.inflight.values():
+            for rn in req.nodes.values():
+                if rn.state in (RUNNING, AWAITING) and executor_id in rn.executor_ids:
+                    rn.state = READY
+                    rn.executor_ids = []
+                    rn.own_done_time = None
+                    if not rn.node.attrs.get("inline") and not rn.node.attrs.get("io_only"):
+                        self.ready.append(rn)
+        # lineage-based recovery of lost values
+        lost = self.engine.executor_lost(executor_id)
+        for key, lineage in lost:
+            if lineage is None:
+                continue
+            rid_s, nid_s = lineage.split(":")
+            req = self.inflight.get(int(rid_s))
+            if req is None:
+                continue
+            self._reexecute(req.nodes[int(nid_s)])
+
+    def _reexecute(self, rnode: RequestNode) -> None:
+        """Reset a DONE node (and missing ancestors) so it runs again."""
+        if rnode.state in (READY, RUNNING, AWAITING):
+            return
+        req = rnode.request
+        missing_parent = False
+        for ref in rnode.node.eager_input_refs():
+            key = req.ref_key(ref)
+            if not self.engine.exists(key):
+                missing_parent = True
+                if ref.producer is not None:
+                    self._reexecute(req.nodes[ref.producer])
+        if rnode.state == DONE:
+            req.remaining += 1
+            req.remaining_work += rnode.infer_est
+        rnode.state = PENDING
+        rnode.own_done_time = None
+        rnode.executor_ids = []
+        rnode.pending_eager = sum(
+            1 for ref in rnode.node.eager_input_refs()
+            if ref.producer is not None and not self.engine.exists(req.ref_key(ref))
+        )
+        # restore consumer refcounts on surviving inputs
+        for ref in rnode.node.all_input_refs():
+            key = req.ref_key(ref)
+            if self.engine.exists(key):
+                self.engine.addref(key)
+        if rnode.pending_eager == 0 and not missing_parent:
+            self._node_ready(rnode)
+
+    # ----------------------------------------------------------- lifecycle
+    def _node_ready(self, rnode: RequestNode) -> None:
+        attrs = rnode.node.attrs
+        if attrs.get("inline"):
+            rnode.state = RUNNING
+            rnode.own_done_time = self.now
+            self._complete_node(rnode, self.now)
+        elif attrs.get("io_only"):
+            rnode.state = RUNNING
+            cost = rnode.node.op.cost()
+            dur = cost.act_io_bytes / self.profiles.hw.remote_bw
+            self._push(self.now + dur, "io_done", rnode)
+        else:
+            rnode.state = READY
+            self.ready.append(rnode)
+
+    def _schedule_cycle(self) -> None:
+        if not self.ready:
+            return
+        free = [e for e in self.executors if e.is_free(self.now)]
+        if not free:
+            return
+        if self.backend is not None:
+            # executable plane really needs input VALUES: hold nodes whose
+            # deferred producers have not finished (timing overlap is the
+            # sim plane's concern; correctness rules here)
+            def deferred_ready(rn):
+                req = rn.request
+                for ref in rn.node.deferred_input_refs():
+                    if ref.producer is not None and \
+                            req.nodes[ref.producer].state != DONE:
+                        return False
+                return True
+            runnable = [rn for rn in self.ready if deferred_ready(rn)]
+            if not runnable:
+                return
+            held = [rn for rn in self.ready if not deferred_ready(rn)]
+            self.ready[:] = runnable
+            try:
+                self._dispatch_cycle(free)
+            finally:
+                self.ready.extend(held)
+            return
+        self._dispatch_cycle(free)
+
+    def _dispatch_cycle(self, free) -> None:
+
+        def fetch_cost(batch: List[RequestNode], executor_id: int) -> float:
+            keys: List[str] = []
+            for rn in batch:
+                keys.extend(rn.input_keys(eager_only=True))
+            return self.engine.batch_fetch_cost(keys, executor_id)
+
+        n_alive = sum(1 for e in self.executors if e.alive)
+        low_load = len(self.inflight) < n_alive
+        decisions = self.scheduler.schedule_cycle(self.ready, free, fetch_cost,
+                                                  low_load=low_load)
+        for d in decisions:
+            self._dispatch(d)
+
+
+    def _dispatch(self, batch: ScheduledBatch) -> None:
+        self.dispatch_log.append(batch)
+        lead = self.by_id[batch.executor_ids[0]]
+        profile = self.profiles.get(batch.model_id)
+        # model loads + patch state on every participating executor
+        for eid in batch.executor_ids:
+            ex = self.by_id[eid]
+            if not ex.has_model(batch.model_id):
+                # dispatch targets are free, so every resident model is idle
+                # and LRU-evictable to make room
+                ex.ensure_capacity(profile.param_bytes)
+                ex.mark_loaded(batch.model_id, profile.param_bytes)
+            else:
+                ex.touch(batch.model_id)
+            ex.set_patches(batch.model_id, list(batch.nodes[0].effective_patches))
+        # account input fetches into the lead executor's store
+        for rn in batch.nodes:
+            for key in rn.input_keys(eager_only=True):
+                if self.engine.exists(key):
+                    self.engine.fetch(key, lead.id)
+        duration = batch.duration
+        # synchronous adapter fetch (no AsyncLoRAPass): the first dispatch
+        # of a patched node on an executor pays the remote fetch inline
+        for rn in batch.nodes:
+            if rn.node.op.patches and not rn.node.attrs.get("lora_check"):
+                for patch in rn.node.op.patches:
+                    ckey = (lead.id, patch.model_id)
+                    if ckey not in self._adapters_cached:
+                        self._adapters_cached.add(ckey)
+                        duration += patch.cost().param_bytes / self.profiles.hw.remote_bw
+        if self.backend is not None:
+            duration = self._execute_real(batch) + batch.l_data + batch.patch_swap
+        for eid in batch.executor_ids:
+            self.by_id[eid].occupy(self.now, duration)
+        for rn in batch.nodes:
+            rn.state = RUNNING
+            rn.executor_ids = list(batch.executor_ids)
+            rn.dispatch_time = self.now
+        self._push(self.now + duration, "batch_done", {"batch": batch})
+
+    def _execute_real(self, batch: ScheduledBatch) -> float:
+        """Executable plane: really run each node; returns measured seconds."""
+        total = 0.0
+        for rn in batch.nodes:
+            req = rn.request
+            kwargs: Dict[str, Any] = {}
+            for name, v in rn.node.inputs.items():
+                if isinstance(v, ValueRef):
+                    kwargs[name] = self.engine.value_of(req.ref_key(v))
+                else:
+                    kwargs[name] = v
+            patches = rn.effective_patches
+            if patches:
+                kwargs["_patches"] = [
+                    p for p in rn.node.op.patches if p.model_id in patches
+                ]
+            _, load_dt = self.backend.ensure_loaded(rn.node.op)
+            out, exec_dt = self.backend.execute(rn.node.op, **kwargs)
+            rn.request.output_values[rn.uid] = out
+            total += load_dt + exec_dt
+        return total
+
+    def _try_finish_running_node(self, rnode: RequestNode) -> None:
+        """Own compute done; finish now or wait for deferred arrivals."""
+        req = rnode.request
+        latest = rnode.own_done_time or self.now
+        unresolved = False
+        for ref in rnode.node.deferred_input_refs():
+            key = req.ref_key(ref)
+            producer = req.nodes.get(ref.producer) if ref.producer is not None else None
+            if producer is not None and producer.state != DONE:
+                unresolved = True
+                rnode.deferred_arrivals[key] = None
+                continue
+            arrival = rnode.deferred_arrivals.get(key)
+            if arrival is None:
+                lead = rnode.executor_ids[0] if rnode.executor_ids else None
+                cost = self.engine.fetch(key, lead) if (
+                    lead is not None and self.engine.exists(key)) else 0.0
+                arrival = self.now + cost
+                rnode.deferred_arrivals[key] = arrival
+            latest = max(latest, arrival)
+        if unresolved:
+            rnode.state = AWAITING
+            return
+        if latest > self.now:
+            for eid in rnode.executor_ids:   # executor blocked on the fetch
+                ex = self.by_id[eid]
+                ex.busy_until = max(ex.busy_until, latest)
+            self._push(latest, "node_late_complete", rnode)
+        else:
+            self._complete_node(rnode, self.now)
+
+    def _complete_node(self, rnode: RequestNode, t: float) -> None:
+        req = rnode.request
+        node = rnode.node
+        rnode.state = DONE
+        req.remaining -= 1
+        req.remaining_work = max(0.0, req.remaining_work - rnode.infer_est)
+        lead = rnode.executor_ids[0] if rnode.executor_ids else self._inline_placement(rnode)
+        cost = node.op.cost()
+        n_ports = max(1, len(node.output_refs))
+        for port, ref in node.output_refs.items():
+            key = req.ref_key(ref)
+            value = None
+            if self.backend is not None:
+                out = req.output_values.get(rnode.uid)
+                if out is None and node.attrs.get("inline"):
+                    out = self._execute_inline(rnode)
+                    req.output_values[rnode.uid] = out
+                if isinstance(out, dict):
+                    value = out.get(port)
+            elif node.attrs.get("inline"):
+                pass  # sim plane: inline ops carry no real payload
+            nb = nbytes_of(value) if value is not None else cost.output_bytes / n_ports
+            refcount = req.consumer_count.get(key, 0)
+            if key in req.pinned_keys:
+                refcount += 1_000_000
+            self.engine.put(key, executor_id=lead, nbytes=int(nb), value=value,
+                            producer_node=rnode.uid, refcount=max(1, refcount))
+        # release consumed inputs (immutable, refcounted GC)
+        for ref in node.all_input_refs():
+            self.engine.release(req.ref_key(ref))
+        # wake downstream nodes
+        for consumer in req.graph.consumers.get(node.id, []):
+            crn = req.nodes[consumer.id]
+            is_eager_dep = any(
+                r.producer == node.id for r in consumer.eager_input_refs()
+            )
+            if is_eager_dep and crn.state == PENDING:
+                crn.pending_eager -= 1
+                if crn.pending_eager == 0:
+                    self._node_ready(crn)
+            # resolve deferred futures on running/awaiting consumers
+            for r in consumer.deferred_input_refs():
+                if r.producer != node.id:
+                    continue
+                key = req.ref_key(r)
+                if crn.state in (RUNNING, AWAITING):
+                    lead_c = crn.executor_ids[0] if crn.executor_ids else None
+                    fetch = self.engine.fetch(key, lead_c) if (
+                        lead_c is not None and self.engine.exists(key)) else 0.0
+                    crn.deferred_arrivals[key] = t + fetch
+                    if crn.state == AWAITING:
+                        crn.state = RUNNING
+                        self._try_finish_running_node(crn)
+        if req.remaining == 0:
+            self._finish_request(req, t)
+
+    def _execute_inline(self, rnode: RequestNode) -> Any:
+        req = rnode.request
+        kwargs: Dict[str, Any] = {}
+        for name, v in rnode.node.inputs.items():
+            if isinstance(v, ValueRef):
+                kwargs[name] = self.engine.value_of(req.ref_key(v))
+            else:
+                kwargs[name] = v
+        return rnode.node.op.execute({}, **kwargs)
+
+    def _inline_placement(self, rnode: RequestNode) -> Optional[int]:
+        req = rnode.request
+        for ref in rnode.node.all_input_refs():
+            key = req.ref_key(ref)
+            if self.engine.exists(key):
+                placements = self.engine.get(key).placements
+                if placements:
+                    return next(iter(placements))
+        return None
+
+    def _finish_request(self, req: Request, t: float) -> None:
+        req.completion = t
+        req.status = "done"
+        self.inflight.pop(req.rid, None)
+        self.finished.append(req)
+        # GC everything this request still holds (inputs + non-output temps)
+        leftovers = [f"r{req.rid}:in:{name}" for name in req.graph.input_ports]
+        for n in req.graph.nodes:
+            leftovers.extend(req.ref_key(ref) for ref in n.output_refs.values())
+        for key in leftovers:
+            if self.engine.exists(key) and key not in req.pinned_keys:
+                sv = self.engine.get(key)
+                sv.refcount = 0
+                self.engine.release(key)
+
+    # -------------------------------------------------------------- metrics
+    def slo_attainment(self, include_rejected: bool = True) -> float:
+        attained = sum(1 for r in self.finished if r.attained)
+        total = len(self.finished) + (len(self.rejected) if include_rejected else 0)
+        return attained / total if total else 0.0
+
+    def mean_latency(self) -> float:
+        lats = [r.latency for r in self.finished if r.latency is not None]
+        return sum(lats) / len(lats) if lats else 0.0
+
+    def p99_latency(self) -> float:
+        lats = sorted(r.latency for r in self.finished if r.latency is not None)
+        if not lats:
+            return 0.0
+        return lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+
+    def total_busy_time(self) -> float:
+        return sum(e.busy_time for e in self.executors)

@@ -1,0 +1,3 @@
+"""Synthetic data pipeline."""
+
+from repro.data.pipeline import DataConfig, SyntheticLM

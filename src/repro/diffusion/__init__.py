@@ -1,0 +1,30 @@
+"""Diffusion substrate: MMDiT backbone, encoders, adapters, sampling,
+servable model wrappers, and the Table-2 workflow builders."""
+
+from repro.diffusion.cache import ApproxCache
+from repro.diffusion.config import (
+    FAMILIES,
+    FLUX_DEV,
+    FLUX_SCHNELL,
+    SD3,
+    SD35_LARGE,
+    SDXL,
+    DiffusionFamily,
+    DiTConfig,
+)
+from repro.diffusion.serving import (
+    ControlNet,
+    DenoiseStep,
+    DiffusionBackbone,
+    LatentsGenerator,
+    LoRAAdapter,
+    ModelSet,
+    ResidualCombine,
+    TextEncoder,
+    VAEDecode,
+    VAEEncode,
+    make_basic_workflow,
+    make_controlnet_workflow,
+    make_lora_workflow,
+    table2_setting,
+)

@@ -1,0 +1,65 @@
+"""Approximate caching store (Nirvana [4], used by the compiler pass §4.2).
+
+Caches intermediate latents of previously generated prompts, keyed by a
+cheap prompt signature.  On a hit, denoising restarts from the cached
+latent at step K instead of random noise, skipping K steps.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+
+def prompt_signature(prompt: str) -> frozenset:
+    return frozenset(w for w in prompt.lower().split() if len(w) > 2)
+
+
+def jaccard(a: frozenset, b: frozenset) -> float:
+    if not a or not b:
+        return 0.0
+    return len(a & b) / len(a | b)
+
+
+class ApproxCache:
+    def __init__(self, similarity_threshold: float = 0.5, capacity: int = 1024) -> None:
+        self.threshold = similarity_threshold
+        self.capacity = capacity
+        # signature -> {step: latent}
+        self._entries: Dict[frozenset, Dict[int, Any]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def insert(self, prompt: str, step: int, latent: Any) -> None:
+        sig = prompt_signature(prompt)
+        if len(self._entries) >= self.capacity and sig not in self._entries:
+            self._entries.pop(next(iter(self._entries)))
+        self._entries.setdefault(sig, {})[step] = latent
+
+    def best_match(self, prompt: str) -> Optional[Tuple[frozenset, float]]:
+        sig = prompt_signature(prompt)
+        best, best_sim = None, 0.0
+        for s in self._entries:
+            sim = jaccard(sig, s)
+            if sim > best_sim:
+                best, best_sim = s, sim
+        if best is not None and best_sim >= self.threshold:
+            return best, best_sim
+        return None
+
+    def lookup(self, prompt: str, step: int) -> Optional[Any]:
+        m = self.best_match(prompt)
+        if m is None:
+            self.misses += 1
+            return None
+        entry = self._entries[m[0]]
+        # closest cached step at or before the requested skip depth
+        steps = sorted(entry)
+        usable = [s for s in steps if s <= step]
+        if not usable:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return entry[usable[-1]]
+
+    def would_hit(self, prompt: str) -> bool:
+        return self.best_match(prompt) is not None

@@ -1,0 +1,139 @@
+"""Text encoder and VAE for the executable diffusion workflows.
+
+* :func:`init_text_encoder` / :func:`text_encoder_apply` — a small
+  bidirectional transformer standing in for CLIP/T5 (real-scale costs are
+  carried by the profiles, not by this toy's size);
+* :func:`init_vae` / :func:`vae_encode` / :func:`vae_decode` — a
+  convolutional autoencoder (stride-2 conv stack) mapping pixels <-> the
+  8x-downsampled latent space the diffusion backbone operates in.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import (
+    dense_init,
+    embed_init,
+    gelu_mlp,
+    gqa_attention,
+    init_mlp,
+    layer_norm,
+    rms_norm,
+    split,
+)
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------ text encoder
+
+def init_text_encoder(
+    key: jax.Array, vocab: int, d_model: int, n_layers: int, n_heads: int,
+    max_len: int = 77, dtype: Any = jnp.float32,
+) -> Params:
+    ks = split(key, 3 + n_layers)
+    layers = []
+    for i in range(n_layers):
+        lk = split(ks[3 + i], 5)
+        layers.append({
+            "norm1": jnp.ones((d_model,), dtype),
+            "wq": dense_init(lk[0], d_model, d_model, dtype),
+            "wk": dense_init(lk[1], d_model, d_model, dtype),
+            "wv": dense_init(lk[2], d_model, d_model, dtype),
+            "wo": dense_init(lk[3], d_model, d_model, dtype),
+            "norm2": jnp.ones((d_model,), dtype),
+            "mlp": init_mlp(lk[4], d_model, 4 * d_model, dtype),
+        })
+    return {
+        "tok": embed_init(ks[0], vocab, d_model, dtype),
+        "pos": embed_init(ks[1], max_len, d_model, dtype),
+        "layers": layers,
+        "final": jnp.ones((d_model,), dtype),
+    }
+
+
+def text_encoder_apply(params: Params, token_ids: jax.Array, n_heads: int) -> jax.Array:
+    """token_ids [B, S] -> embeddings [B, S, d]."""
+    b, s = token_ids.shape
+    x = params["tok"][token_ids] + params["pos"][None, :s]
+    for p in params["layers"]:
+        h = rms_norm(x, p["norm1"])
+        bb, ss, d = h.shape
+        hd = d // n_heads
+        q = (h @ p["wq"]).reshape(bb, ss, n_heads, hd)
+        k = (h @ p["wk"]).reshape(bb, ss, n_heads, hd)
+        v = (h @ p["wv"]).reshape(bb, ss, n_heads, hd)
+        attn = gqa_attention(q, k, v, causal=False).reshape(bb, ss, d)
+        x = x + attn @ p["wo"]
+        x = x + gelu_mlp(p["mlp"], rms_norm(x, p["norm2"]))
+    return rms_norm(x, params["final"])
+
+
+def tokenize(prompt: str, vocab: int, max_len: int) -> jnp.ndarray:
+    """Deterministic toy tokenizer: hash words into the vocab."""
+    ids = [hash(w) % (vocab - 2) + 2 for w in prompt.lower().split()][: max_len - 1]
+    ids = [1] + ids
+    ids = ids + [0] * (max_len - len(ids))
+    return jnp.asarray([ids], dtype=jnp.int32)
+
+
+# -------------------------------------------------------------------- VAE
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    scale = 1.0 / jnp.sqrt(kh * kw * cin)
+    return jax.random.normal(key, (kh, kw, cin, cout), dtype=jnp.float32).astype(dtype) * scale
+
+
+def init_vae(key: jax.Array, image_channels: int = 3, latent_channels: int = 4,
+             base: int = 32, dtype: Any = jnp.float32) -> Params:
+    """Three stride-2 stages: pixels (S*8, S*8) <-> latents (S, S)."""
+    ks = split(key, 8)
+    return {
+        "enc": [
+            _conv_init(ks[0], 3, 3, image_channels, base, dtype),
+            _conv_init(ks[1], 3, 3, base, base * 2, dtype),
+            _conv_init(ks[2], 3, 3, base * 2, base * 2, dtype),
+        ],
+        "enc_out": _conv_init(ks[3], 1, 1, base * 2, latent_channels, dtype),
+        "dec_in": _conv_init(ks[4], 1, 1, latent_channels, base * 2, dtype),
+        "dec": [
+            _conv_init(ks[5], 3, 3, base * 2, base * 2, dtype),
+            _conv_init(ks[6], 3, 3, base * 2, base, dtype),
+            _conv_init(ks[7], 3, 3, base, image_channels, dtype),
+        ],
+    }
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _upsample(x):
+    b, h, w, c = x.shape
+    x = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+    return x
+
+
+def vae_encode(params: Params, image: jax.Array) -> jax.Array:
+    """image [B, H, W, 3] -> latents [B, H/8, W/8, C]."""
+    x = image
+    for w in params["enc"]:
+        x = jax.nn.silu(_conv(x, w, stride=2))
+    return _conv(x, params["enc_out"])
+
+
+def vae_decode(params: Params, latents: jax.Array) -> jax.Array:
+    x = _conv(latents, params["dec_in"])
+    for i, w in enumerate(params["dec"]):
+        x = _upsample(x)
+        x = _conv(x, w)
+        if i < len(params["dec"]) - 1:
+            x = jax.nn.silu(x)
+    return jnp.tanh(x)

@@ -1,0 +1,236 @@
+"""MMDiT diffusion backbone (SD3/Flux-style) in pure JAX.
+
+Joint text-image attention transformer with adaLN timestep modulation
+[Esser et al. 2024].  Layers are *stacked* and iterated with
+``jax.lax.scan`` so the compiled HLO contains each block once — essential
+for the multi-pod dry-runs.
+
+The same block stack doubles as the ControlNet branch
+(:func:`init_controlnet` / :func:`controlnet_apply`): a truncated copy of
+the backbone whose per-layer image-stream states are projected through
+zero-initialized denses into additive residuals, which
+:func:`mmdit_apply` injects after the corresponding backbone layers —
+exactly the fan-in dataflow whose cross-GPU scheduling LegoDiffusion's
+deferred fetch exists to support.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.config import DiTConfig
+from repro.nn.layers import (
+    dense_init,
+    gqa_attention,
+    modulate,
+    rms_norm,
+    split,
+    timestep_embedding,
+)
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ blocks
+
+def _init_stream(key: jax.Array, cfg: DiTConfig) -> Params:
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = split(key, 8)
+    return {
+        "ada": dense_init(ks[0], d, 6 * d, cfg.dtype, scale=0.02),
+        "ada_b": jnp.zeros((6 * d,), cfg.dtype),
+        "norm1": jnp.ones((d,), cfg.dtype),
+        "wq": dense_init(ks[1], d, d, cfg.dtype),
+        "wk": dense_init(ks[2], d, d, cfg.dtype),
+        "wv": dense_init(ks[3], d, d, cfg.dtype),
+        "wo": dense_init(ks[4], d, d, cfg.dtype),
+        "norm2": jnp.ones((d,), cfg.dtype),
+        "w1": dense_init(ks[5], d, dff, cfg.dtype),
+        "w2": dense_init(ks[6], dff, d, cfg.dtype),
+    }
+
+
+def init_layer(key: jax.Array, cfg: DiTConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"img": _init_stream(k1, cfg), "txt": _init_stream(k2, cfg)}
+
+
+def _stream_qkv(p: Params, x: jax.Array, t_emb: jax.Array, n_heads: int):
+    ada = jax.nn.silu(t_emb) @ p["ada"] + p["ada_b"]
+    (s1, g1, m1, s2, g2, m2) = jnp.split(ada, 6, axis=-1)
+    m1 = 1.0 + m1          # gate baseline: identity-plus-delta
+    m2 = 1.0 + m2
+    h = modulate(rms_norm(x, p["norm1"]), s1, g1).astype(x.dtype)
+    b, s, d = h.shape
+    hd = d // n_heads
+    q = (h @ p["wq"]).reshape(b, s, n_heads, hd)
+    k = (h @ p["wk"]).reshape(b, s, n_heads, hd)
+    v = (h @ p["wv"]).reshape(b, s, n_heads, hd)
+    return q, k, v, (m1, s2, g2, m2)
+
+
+def _stream_post(p: Params, x: jax.Array, attn_out: jax.Array, mods, n_heads: int):
+    m1, s2, g2, m2 = mods
+    b, s, _, _ = attn_out.shape
+    # keep the residual stream in the param dtype (t_emb gates are f32)
+    x = x + (m1[:, None, :] * (attn_out.reshape(b, s, -1) @ p["wo"])
+             ).astype(x.dtype)
+    h = modulate(rms_norm(x, p["norm2"]), s2, g2).astype(x.dtype)
+    x = x + (m2[:, None, :] * (jax.nn.gelu(h @ p["w1"]) @ p["w2"])
+             ).astype(x.dtype)
+    return x
+
+
+def mmdit_block(
+    p: Params,
+    x: jax.Array,            # image tokens [B, Ti, d]
+    c: jax.Array,            # text tokens  [B, Tc, d]
+    t_emb: jax.Array,        # [B, d]
+    n_heads: int,
+) -> Tuple[jax.Array, jax.Array]:
+    qi, ki, vi, mods_i = _stream_qkv(p["img"], x, t_emb, n_heads)
+    qt, kt, vt, mods_t = _stream_qkv(p["txt"], c, t_emb, n_heads)
+    q = jnp.concatenate([qt, qi], axis=1)
+    k = jnp.concatenate([kt, ki], axis=1)
+    v = jnp.concatenate([vt, vi], axis=1)
+    out = gqa_attention(q, k, v, causal=False)
+    tc = c.shape[1]
+    out_t, out_i = out[:, :tc], out[:, tc:]
+    x = _stream_post(p["img"], x, out_i, mods_i, n_heads)
+    c = _stream_post(p["txt"], c, out_t, mods_t, n_heads)
+    return x, c
+
+
+# ---------------------------------------------------------------- backbone
+
+def init_mmdit(key: jax.Array, cfg: DiTConfig) -> Params:
+    ks = split(key, 8)
+    d = cfg.d_model
+    in_dim = cfg.patch * cfg.patch * cfg.latent_channels
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "patch_embed": dense_init(ks[1], in_dim, d, cfg.dtype),
+        "text_proj": dense_init(ks[2], cfg.text_dim, d, cfg.dtype),
+        "t_mlp1": dense_init(ks[3], 256, d, cfg.dtype),
+        "t_mlp2": dense_init(ks[4], d, d, cfg.dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), cfg.dtype),
+        "final_ada": dense_init(ks[5], d, 2 * d, cfg.dtype, scale=0.02),
+        "final_ada_b": jnp.zeros((2 * d,), cfg.dtype),
+        "final_proj": dense_init(ks[6], d, in_dim, cfg.dtype),
+    }
+
+
+def patchify(latents: jax.Array, patch: int) -> jax.Array:
+    b, h, w, ch = latents.shape
+    x = latents.reshape(b, h // patch, patch, w // patch, patch, ch)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // patch) * (w // patch), patch * patch * ch)
+
+
+def unpatchify(tokens: jax.Array, patch: int, size: int, channels: int) -> jax.Array:
+    b = tokens.shape[0]
+    g = size // patch
+    x = tokens.reshape(b, g, g, patch, patch, channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, size, size, channels)
+
+
+def _embed_inputs(params: Params, cfg: DiTConfig, latents, t, text_emb):
+    x = patchify(latents, cfg.patch) @ params["patch_embed"]
+    c = text_emb @ params["text_proj"]
+    t_emb = timestep_embedding(t, 256)
+    t_emb = jax.nn.silu(t_emb @ params["t_mlp1"]) @ params["t_mlp2"]
+    return x, c, t_emb
+
+
+def mmdit_apply(
+    params: Params,
+    cfg: DiTConfig,
+    latents: jax.Array,                       # [B, S, S, C]
+    t: jax.Array,                             # [B]
+    text_emb: jax.Array,                      # [B, Tc, text_dim]
+    control_residuals: Optional[jax.Array] = None,   # [L, B, Ti, d] (padded)
+) -> jax.Array:
+    """One denoising forward pass; returns the velocity/noise prediction."""
+    x, c, t_emb = _embed_inputs(params, cfg, latents, t, text_emb)
+    if control_residuals is None:
+        control_residuals = jnp.zeros(
+            (cfg.n_layers,) + x.shape, dtype=x.dtype
+        )
+
+    def body(carry, xs):
+        x, c = carry
+        layer_p, res = xs
+        x, c = mmdit_block(layer_p, x, c, t_emb, cfg.n_heads)
+        x = x + res
+        return (x, c), None
+
+    (x, c), _ = jax.lax.scan(body, (x, c), (params["layers"], control_residuals))
+    ada = jax.nn.silu(t_emb) @ params["final_ada"] + params["final_ada_b"]
+    shift, scale = jnp.split(ada, 2, axis=-1)
+    x = modulate(rms_norm(x, params["final_norm"]), shift, scale)
+    out = x @ params["final_proj"]
+    return unpatchify(out, cfg.patch, cfg.latent_size, cfg.latent_channels)
+
+
+# -------------------------------------------------------------- ControlNet
+
+def init_controlnet(key: jax.Array, cfg: DiTConfig, n_cn_layers: Optional[int] = None) -> Params:
+    """ControlNet branch: truncated backbone copy + zero-init out projs."""
+    n_cn = n_cn_layers or max(1, cfg.n_layers // 2)
+    ks = split(key, 3)
+    base = init_mmdit(ks[0], cfg)
+    layer_keys = jax.random.split(ks[1], n_cn)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    d = cfg.d_model
+    # small (not zero) residual projections so the executable plane is
+    # non-degenerate; true zero-init is a training-time concern
+    zero_proj = (jax.random.normal(split(ks[2], 2)[0], (n_cn, d, d),
+                                   dtype=jnp.float32) * 0.02).astype(cfg.dtype)
+    return {
+        "patch_embed": base["patch_embed"],
+        "cond_embed": dense_init(ks[2], cfg.patch * cfg.patch * cfg.latent_channels,
+                                 d, cfg.dtype, scale=0.0),
+        "text_proj": base["text_proj"],
+        "t_mlp1": base["t_mlp1"],
+        "t_mlp2": base["t_mlp2"],
+        "layers": layers,
+        "zero_proj": zero_proj,
+    }
+
+
+def controlnet_apply(
+    params: Params,
+    cfg: DiTConfig,
+    latents: jax.Array,          # current noisy latents [B,S,S,C]
+    cond_latents: jax.Array,     # VAE-encoded reference image [B,S,S,C]
+    t: jax.Array,
+    text_emb: jax.Array,
+) -> jax.Array:
+    """Returns residuals [n_layers, B, Ti, d], zero-padded to full depth."""
+    x = patchify(latents, cfg.patch) @ params["patch_embed"]
+    x = x + patchify(cond_latents, cfg.patch) @ params["cond_embed"]
+    c = text_emb @ params["text_proj"]
+    t_emb = timestep_embedding(t, 256)
+    t_emb = jax.nn.silu(t_emb @ params["t_mlp1"]) @ params["t_mlp2"]
+
+    def body(carry, xs):
+        x, c = carry
+        layer_p, zproj = xs
+        x, c = mmdit_block(layer_p, x, c, t_emb, cfg.n_heads)
+        return (x, c), x @ zproj
+
+    (_, _), residuals = jax.lax.scan(
+        body, (x, c), (params["layers"], params["zero_proj"])
+    )
+    n_cn = residuals.shape[0]
+    if n_cn < cfg.n_layers:
+        pad = jnp.zeros((cfg.n_layers - n_cn,) + residuals.shape[1:], residuals.dtype)
+        residuals = jnp.concatenate([residuals, pad], axis=0)
+    return residuals

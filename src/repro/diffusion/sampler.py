@@ -1,0 +1,98 @@
+"""Rectified-flow sampling + classifier-free guidance + latent parallelism.
+
+* :func:`flow_schedule` — the timestep grid (t: 1 -> 0);
+* :func:`denoise_step` — one Euler step of the probability-flow ODE;
+* :func:`cfg_combine` — classifier-free guidance combination [26];
+* :func:`latent_parallel_denoise` — the paper's *latent parallelism*
+  (§2.1): the conditional and unconditional passes of a CFG step run on
+  separate devices of a ``cfg`` mesh axis via ``shard_map``; the per-step
+  scatter-gather the paper describes becomes one ``psum`` on the guided
+  velocity.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.diffusion.config import DiTConfig
+from repro.diffusion.mmdit import mmdit_apply
+
+
+def flow_schedule(num_steps: int, shift: float = 1.0) -> jnp.ndarray:
+    """Timesteps t_0=1 ... t_N=0 (rectified flow, optional SD3 shift)."""
+    t = jnp.linspace(1.0, 0.0, num_steps + 1)
+    if shift != 1.0:
+        t = shift * t / (1 + (shift - 1) * t)
+    return t
+
+
+def denoise_step(latents: jnp.ndarray, velocity: jnp.ndarray,
+                 t_cur: jnp.ndarray, t_next: jnp.ndarray) -> jnp.ndarray:
+    """Euler step of dx/dt = v: x_{t_next} = x + (t_next - t_cur) * v."""
+    dt = (t_next - t_cur).astype(latents.dtype)
+    return latents + dt * velocity
+
+
+def cfg_combine(v_uncond: jnp.ndarray, v_cond: jnp.ndarray,
+                guidance: float) -> jnp.ndarray:
+    return v_uncond + guidance * (v_cond - v_uncond)
+
+
+def cfg_velocity(
+    params: Dict[str, Any],
+    cfg: DiTConfig,
+    latents: jnp.ndarray,
+    t: jnp.ndarray,
+    text_emb: jnp.ndarray,
+    null_emb: jnp.ndarray,
+    guidance: float = 4.5,
+    control_residuals: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Sequential CFG: two backbone passes on one device."""
+    v_c = mmdit_apply(params, cfg, latents, t, text_emb, control_residuals)
+    v_u = mmdit_apply(params, cfg, latents, t, null_emb, control_residuals)
+    return cfg_combine(v_u, v_c, guidance)
+
+
+def latent_parallel_velocity(
+    mesh: Mesh,
+    params: Dict[str, Any],
+    cfg: DiTConfig,
+    latents: jnp.ndarray,
+    t: jnp.ndarray,
+    text_emb: jnp.ndarray,
+    null_emb: jnp.ndarray,
+    guidance: float = 4.5,
+    axis: str = "cfg",
+) -> jnp.ndarray:
+    """CFG with the two passes split across the ``cfg`` mesh axis (size 2).
+
+    Device 0 computes the conditional velocity, device 1 the unconditional
+    one; a single ``psum`` gathers the guided combination — this is the
+    scatter-gather synchronization of Fig. 2 mapped onto one ICI
+    collective per denoising step.
+    """
+    assert mesh.shape[axis] == 2, "latent parallelism uses a cfg axis of 2"
+
+    def shard_fn(params, latents, t, emb_pair):
+        idx = jax.lax.axis_index(axis)
+        emb = emb_pair[0]                      # this shard's embedding
+        v = mmdit_apply(params, cfg, latents, t, emb)
+        # guided = g*v_cond + (1-g)*v_uncond, assembled via psum
+        weight = jnp.where(idx == 0, guidance, 1.0 - guidance)
+        return jax.lax.psum(weight * v, axis)
+
+    emb_pair = jnp.stack([text_emb, null_emb])  # [2, B, Tc, d]
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(axis)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(params, latents, t, emb_pair)

@@ -1,0 +1,471 @@
+"""Servable diffusion models + workflow builders (Table 2's S1-S6).
+
+Every component of a T2I workflow is a :class:`~repro.core.model.Model`
+subclass whose ``cost()`` carries the real-scale statistics (for profiles,
+baselines, roofline) and whose ``load()/execute()`` run the *toy-scale*
+JAX implementation (for the executable plane).  One code path, two scales.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model import Model, ModelCost
+from repro.core.types import Image, TensorType
+from repro.core.workflow import WorkflowTemplate, compose
+from repro.diffusion.config import DiffusionFamily, DiTConfig, FAMILIES
+from repro.diffusion.encoders import (
+    init_text_encoder,
+    init_vae,
+    text_encoder_apply,
+    tokenize,
+    vae_decode,
+    vae_encode,
+)
+from repro.diffusion.lora import fold_lora, init_lora, randomize_lora
+from repro.diffusion.mmdit import controlnet_apply, init_controlnet, init_mmdit, mmdit_apply
+from repro.diffusion.sampler import cfg_combine, denoise_step, flow_schedule
+
+_TOY_VOCAB = 512
+
+
+# --------------------------------------------------------------------------
+# Component models
+# --------------------------------------------------------------------------
+
+class LatentsGenerator(Model):
+    trivial = True
+
+    def __init__(self, family: DiffusionFamily) -> None:
+        self.family = family
+        super().__init__(model_id="latents_generator")
+
+    def setup_io(self) -> None:
+        self.add_input("seed", int)
+        self.add_output("latents", TensorType())
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        cfg = self.family.toy
+        key = jax.random.PRNGKey(int(kw["seed"]))
+        lat = jax.random.normal(
+            key, (1, cfg.latent_size, cfg.latent_size, cfg.latent_channels)
+        )
+        return {"latents": lat}
+
+    def cost(self) -> ModelCost:
+        return ModelCost(1e6, 0, 1e6, self.family.latent_bytes(), max_batch=64)
+
+
+class TextEncoder(Model):
+    def __init__(self, family: DiffusionFamily) -> None:
+        self.family = family
+        super().__init__(model_id=f"text_encoder:{family.name}")
+
+    def setup_io(self) -> None:
+        self.add_input("prompt", str)
+        self.add_output("prompt_embeds", TensorType())
+
+    def load(self, device: Any = None) -> Dict[str, Any]:
+        cfg = self.family.toy
+        params = init_text_encoder(
+            jax.random.PRNGKey(hash(self.model_id) % 2**31),
+            _TOY_VOCAB, cfg.text_dim, n_layers=2, n_heads=4,
+            max_len=cfg.text_tokens,
+        )
+        apply = jax.jit(lambda p, ids: text_encoder_apply(p, ids, n_heads=4))
+        return {"params": params, "apply": apply}
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        cfg = self.family.toy
+        ids = tokenize(kw["prompt"], _TOY_VOCAB, cfg.text_tokens)
+        emb = model_components["apply"](model_components["params"], ids)
+        return {"prompt_embeds": emb}
+
+    def cost(self) -> ModelCost:
+        f = self.family
+        return ModelCost(
+            flops_per_item=f.text_encode_flops(),
+            param_bytes=f.text_encoder_bytes(),
+            act_io_bytes=f.text_encoder_bytes(),      # memory-bound at b=1
+            output_bytes=f.text_tokens * 4096 * 2.0,
+            max_batch=32,
+        )
+
+
+class DiffusionBackbone(Model):
+    """One denoising step of the base diffusion model (CFG included).
+
+    ``eager_controlnet=True`` declares the ControlNet residuals as an
+    EAGER input (serializing ControlNet before the backbone) — the
+    ablation baseline for deferred-fetch inter-node parallelism (§7.3).
+    """
+
+    def __init__(self, family: DiffusionFamily, eager_controlnet: bool = False) -> None:
+        self.family = family
+        self.eager_controlnet = eager_controlnet
+        super().__init__(model_id=f"backbone:{family.name}")
+
+    def setup_io(self) -> None:
+        self.add_input("latents", TensorType())
+        self.add_input("prompt_embeds", TensorType())
+        self.add_input("t", float)
+        self.add_input("controlnet_residuals", TensorType(),
+                       deferred=not getattr(self, "eager_controlnet", False))
+        self.add_input("guidance", float)
+        self.add_output("velocity", TensorType())
+
+    def load(self, device: Any = None) -> Dict[str, Any]:
+        cfg = self.family.toy
+        params = init_mmdit(jax.random.PRNGKey(hash(self.model_id) % 2**31), cfg)
+        apply = jax.jit(
+            lambda p, lat, t, emb, res: mmdit_apply(p, cfg, lat, t, emb, res)
+        )
+        return {"params": params, "apply": apply, "cfg": cfg}
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        cfg: DiTConfig = model_components["cfg"]
+        params = model_components["params"]
+        for patch in kw.get("_patches", []) or []:
+            lora_params = patch.load()["lora"]
+            params = fold_lora(params, lora_params)
+        lat = kw["latents"]
+        emb = kw["prompt_embeds"]
+        t = jnp.full((lat.shape[0],), float(kw["t"]))
+        res = kw.get("controlnet_residuals")
+        if res is None:
+            res = jnp.zeros(
+                (cfg.n_layers, lat.shape[0], cfg.image_tokens, cfg.d_model),
+                lat.dtype,
+            )
+        apply = model_components["apply"]
+        v_c = apply(params, lat, t, emb, res)
+        if self.family.uses_cfg:
+            null_emb = jnp.zeros_like(emb)
+            v_u = apply(params, lat, t, null_emb, res)
+            v = cfg_combine(v_u, v_c, float(kw.get("guidance", 4.5)))
+        else:
+            v = v_c
+        return {"velocity": v}
+
+    def cost(self) -> ModelCost:
+        f = self.family
+        tokens = f.image_tokens + f.text_tokens
+        return ModelCost(
+            flops_per_item=f.backbone_step_flops(),
+            param_bytes=f.backbone_bytes(),
+            act_io_bytes=12.0 * f.n_layers_real * tokens * f.d_model_real * 2.0,
+            output_bytes=f.image_tokens * 16 * 2.0,
+            max_parallelism=2,           # latent (CFG) / sequence parallelism
+            max_batch=8,
+            calls_per_request=f.denoise_steps,
+        )
+
+
+class ControlNet(Model):
+    def __init__(self, family: DiffusionFamily, variant: int = 1) -> None:
+        self.family = family
+        self.variant = variant
+        super().__init__(model_id=f"controlnet{variant}:{family.name}")
+
+    def setup_io(self) -> None:
+        self.add_input("latents", TensorType())
+        self.add_input("cond_latents", TensorType())
+        self.add_input("prompt_embeds", TensorType())
+        self.add_input("t", float)
+        self.add_output("controlnet_residuals", TensorType())
+
+    def load(self, device: Any = None) -> Dict[str, Any]:
+        cfg = self.family.toy
+        params = init_controlnet(
+            jax.random.PRNGKey(hash(self.model_id) % 2**31), cfg
+        )
+        apply = jax.jit(
+            lambda p, lat, cond, t, emb: controlnet_apply(p, cfg, lat, cond, t, emb)
+        )
+        return {"params": params, "apply": apply}
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        lat = kw["latents"]
+        t = jnp.full((lat.shape[0],), float(kw["t"]))
+        res = model_components["apply"](
+            model_components["params"], lat, kw["cond_latents"], t,
+            kw["prompt_embeds"],
+        )
+        return {"controlnet_residuals": res}
+
+    def cost(self) -> ModelCost:
+        f = self.family
+        return ModelCost(
+            flops_per_item=f.controlnet_step_flops(),
+            param_bytes=f.controlnet_bytes(),
+            act_io_bytes=6.0 * f.n_layers_real * (f.image_tokens + f.text_tokens)
+            * f.d_model_real,
+            output_bytes=f.controlnet_residual_bytes(),
+            max_batch=8,
+            calls_per_request=f.denoise_steps,
+        )
+
+
+class VAEDecode(Model):
+    def __init__(self, family: DiffusionFamily) -> None:
+        self.family = family
+        super().__init__(model_id=f"vae:{family.name}")
+
+    def setup_io(self) -> None:
+        self.add_input("latents", TensorType())
+        self.add_output("image", Image)
+
+    def load(self, device: Any = None) -> Dict[str, Any]:
+        cfg = self.family.toy
+        params = init_vae(
+            jax.random.PRNGKey(hash(f"vae:{self.family.name}") % 2**31),
+            latent_channels=cfg.latent_channels,
+        )
+        return {
+            "params": params,
+            "decode": jax.jit(vae_decode),
+            "encode": jax.jit(vae_encode),
+        }
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        img = model_components["decode"](model_components["params"], kw["latents"])
+        return {"image": img}
+
+    def cost(self) -> ModelCost:
+        f = self.family
+        return ModelCost(
+            flops_per_item=f.vae_decode_flops(),
+            param_bytes=f.vae_bytes(),
+            act_io_bytes=f.image_tokens * 64 * 48.0,
+            output_bytes=f.image_tokens * 64 * 3 * 1.0,   # uint8 pixels
+            max_batch=16,
+        )
+
+
+class VAEEncode(Model):
+    """Reference-image encoder; shares the VAE weights (same model_id)."""
+
+    def __init__(self, family: DiffusionFamily) -> None:
+        self.family = family
+        super().__init__(model_id=f"vae:{family.name}")
+
+    def setup_io(self) -> None:
+        self.add_input("image", Image)
+        self.add_output("cond_latents", TensorType())
+
+    def load(self, device: Any = None) -> Dict[str, Any]:
+        return VAEDecode(self.family).load(device)
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        img = kw["image"]
+        if not hasattr(img, "shape"):   # toy stand-in for a PIL image
+            cfg = self.family.toy
+            img = jnp.zeros((1, cfg.latent_size * 8, cfg.latent_size * 8, 3))
+        lat = model_components["encode"](model_components["params"], img)
+        return {"cond_latents": lat}
+
+    def cost(self) -> ModelCost:
+        c = VAEDecode(self.family).cost()
+        return ModelCost(c.flops_per_item, c.param_bytes, c.act_io_bytes,
+                         self.family.latent_bytes(), max_batch=16)
+
+
+class DenoiseStep(Model):
+    """Euler scheduler step — trivial arithmetic, runs inline."""
+
+    trivial = True
+
+    def __init__(self, family: DiffusionFamily) -> None:
+        self.family = family
+        super().__init__(model_id="denoise_step")
+
+    def setup_io(self) -> None:
+        self.add_input("velocity", TensorType())
+        self.add_input("latents", TensorType())
+        self.add_input("t_cur", float)
+        self.add_input("t_next", float)
+        self.add_output("latents", TensorType())
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        lat = denoise_step(
+            kw["latents"], kw["velocity"],
+            jnp.asarray(kw["t_cur"]), jnp.asarray(kw["t_next"]),
+        )
+        return {"latents": lat}
+
+    def cost(self) -> ModelCost:
+        return ModelCost(1e6, 0, 1e6, self.family.latent_bytes(), max_batch=64)
+
+
+class ResidualCombine(Model):
+    """Sum residual stacks from multiple ControlNets — trivial, inline."""
+
+    trivial = True
+
+    def __init__(self, family: DiffusionFamily) -> None:
+        self.family = family
+        super().__init__(model_id="residual_combine")
+
+    def setup_io(self) -> None:
+        self.add_input("a", TensorType())
+        self.add_input("b", TensorType())
+        self.add_output("controlnet_residuals", TensorType())
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        return {"controlnet_residuals": kw["a"] + kw["b"]}
+
+    def cost(self) -> ModelCost:
+        return ModelCost(1e6, 0, 1e6,
+                         self.family.controlnet_residual_bytes(), max_batch=64)
+
+
+class LoRAAdapter(Model):
+    """Weight-patching adapter (attached via ``backbone.add_patch``)."""
+
+    def __init__(self, family: DiffusionFamily, name: str = "style",
+                 rank: int = 8, param_bytes: float = 886 * 2**20) -> None:
+        self.family = family
+        self.rank = rank
+        self._param_bytes = param_bytes
+        super().__init__(model_id=f"lora:{name}:{family.name}")
+
+    def setup_io(self) -> None:
+        self.add_output("adapter_weights", TensorType())
+
+    def load(self, device: Any = None) -> Dict[str, Any]:
+        key = jax.random.PRNGKey(hash(self.model_id) % 2**31)
+        lora = init_lora(key, self.family.toy, rank=self.rank)
+        return {"lora": randomize_lora(key, lora)}
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        return {"adapter_weights": model_components["lora"]}
+
+    def cost(self) -> ModelCost:
+        return ModelCost(0, self._param_bytes, self._param_bytes,
+                         self._param_bytes, max_batch=1)
+
+
+# --------------------------------------------------------------------------
+# Workflow builders (Table 2)
+# --------------------------------------------------------------------------
+
+class ModelSet:
+    """Shared model instances for one family (sharing is by model_id)."""
+
+    def __init__(self, family: DiffusionFamily) -> None:
+        self.family = family
+        self.latents = LatentsGenerator(family)
+        self.text_enc = TextEncoder(family)
+        self.backbone = DiffusionBackbone(family)
+        self.cn1 = ControlNet(family, 1)
+        self.cn2 = ControlNet(family, 2)
+        self.vae_dec = VAEDecode(family)
+        self.vae_enc = VAEEncode(family)
+        self.denoise = DenoiseStep(family)
+        self.combine = ResidualCombine(family)
+
+
+def _denoising_loop(ms: ModelSet, wf, lat, emb, steps: int, guidance: float,
+                    controlnets: List[Model], cond_lat) -> Any:
+    sched = [float(x) for x in flow_schedule(steps)]
+    for i in range(steps):
+        t_cur, t_next = sched[i], sched[i + 1]
+        res = None
+        for cn in controlnets:
+            r = cn(lat, cond_lat, emb, t_cur)
+            res = r if res is None else ms.combine(res, r)
+        v = ms.backbone(
+            latents=lat, prompt_embeds=emb, t=t_cur,
+            controlnet_residuals=res, guidance=guidance,
+        )
+        lat = ms.denoise(v, lat, t_cur, t_next)
+    return lat
+
+
+def make_basic_workflow(family_name: str, ms: Optional[ModelSet] = None) -> WorkflowTemplate:
+    family = FAMILIES[family_name]
+    ms = ms or ModelSet(family)
+
+    @compose(f"{family.name}:basic")
+    def wf_fn(wf, steps=family.denoise_steps, guidance=4.5):
+        seed = wf.add_input("seed", int)
+        prompt = wf.add_input("prompt", str)
+        lat = ms.latents(seed)
+        emb = ms.text_enc(prompt)
+        lat = _denoising_loop(ms, wf, lat, emb, steps, guidance, [], None)
+        img = ms.vae_dec(lat)
+        wf.add_output(img, name="image")
+
+    return wf_fn
+
+
+def make_controlnet_workflow(
+    family_name: str, n_controlnets: int = 1, ms: Optional[ModelSet] = None
+) -> WorkflowTemplate:
+    family = FAMILIES[family_name]
+    ms = ms or ModelSet(family)
+    cns = [ms.cn1, ms.cn2][:n_controlnets]
+
+    @compose(f"{family.name}:cn{n_controlnets}")
+    def wf_fn(wf, steps=family.denoise_steps, guidance=4.5):
+        seed = wf.add_input("seed", int)
+        prompt = wf.add_input("prompt", str)
+        ref_image = wf.add_input("ref_image", Image)
+        lat = ms.latents(seed)
+        emb = ms.text_enc(prompt)
+        cond = ms.vae_enc(ref_image)
+        lat = _denoising_loop(ms, wf, lat, emb, steps, guidance, cns, cond)
+        img = ms.vae_dec(lat)
+        wf.add_output(img, name="image")
+
+    return wf_fn
+
+
+def make_lora_workflow(
+    family_name: str, lora_name: str = "style", ms: Optional[ModelSet] = None
+) -> WorkflowTemplate:
+    family = FAMILIES[family_name]
+    ms = ms or ModelSet(family)
+    # a fresh backbone instance so the patch does not leak into other
+    # workflows sharing the ModelSet (model_id stays identical -> shareable)
+    backbone = DiffusionBackbone(family)
+    lora = LoRAAdapter(family, lora_name)
+    backbone.add_patch(lora)
+    patched = ModelSet(family)
+    patched.backbone = backbone
+    patched.latents, patched.text_enc = ms.latents, ms.text_enc
+    patched.vae_dec, patched.denoise = ms.vae_dec, ms.denoise
+
+    @compose(f"{family.name}:lora:{lora_name}")
+    def wf_fn(wf, steps=family.denoise_steps, guidance=4.5):
+        seed = wf.add_input("seed", int)
+        prompt = wf.add_input("prompt", str)
+        lat = patched.latents(seed)
+        emb = patched.text_enc(prompt)
+        lat = _denoising_loop(patched, wf, lat, emb, steps, guidance, [], None)
+        img = patched.vae_dec(lat)
+        wf.add_output(img, name="image")
+
+    return wf_fn
+
+
+def table2_setting(setting: str) -> Dict[str, WorkflowTemplate]:
+    """S1-S6 from Table 2: per-family (Basic, +C.N.1, +C.N.2) workflows."""
+    singles = {"s1": ["sd3"], "s2": ["sd3.5-large"], "s3": ["flux-schnell"],
+               "s4": ["flux-dev"], "s5": ["sd3", "sd3.5-large"],
+               "s6": ["flux-schnell", "flux-dev"]}
+    fams = singles[setting.lower()]
+    out: Dict[str, WorkflowTemplate] = {}
+    for f in fams:
+        ms = ModelSet(FAMILIES[f])
+        basic = make_basic_workflow(f, ms)
+        cn1 = make_controlnet_workflow(f, 1, ms)
+        cn2 = make_controlnet_workflow(f, 2, ms)
+        out[basic.name] = basic
+        out[cn1.name] = cn1
+        out[cn2.name] = cn2
+    return out

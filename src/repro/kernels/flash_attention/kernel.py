@@ -1,0 +1,125 @@
+"""Blockwise online-softmax attention (FlashAttention) as a Pallas TPU kernel.
+
+TPU-native design notes (HARDWARE ADAPTATION):
+
+* Tiling is chosen for the VMEM hierarchy: a ``(block_q, head_dim)`` query
+  tile stays VMEM-resident across the whole K/V sweep; K/V stream through
+  in ``(block_k, head_dim)`` tiles.  Defaults are MXU-aligned multiples of
+  128.
+* The k-sweep is the **last grid dimension**, which Mosaic executes
+  sequentially per (bh, q) tile — the running max/sum/accumulator live in
+  VMEM scratch across those iterations (the TPU analogue of a CUDA
+  thread-block's shared-memory accumulators).
+* Causal and sliding-window masks are applied with absolute-position iota
+  against the tile offsets, so the same kernel serves full, causal, and
+  SWA attention (the long_500k decode variant).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, scale: float, causal: bool, window: Optional[int],
+    block_q: int, block_k: int, seq_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[...].astype(jnp.float32) * scale          # [bq, d]
+    k = k_ref[...].astype(jnp.float32)                  # [bk, d]
+    s = q @ k.T                                         # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_k                                # padding guard
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]                             # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # zero masked probs explicitly: a fully-masked tile must contribute 0,
+    # not exp(NEG_INF - NEG_INF) = 1
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)        # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                     # [bq, 1]
+    l_new = alpha * l_scratch[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[...].astype(jnp.float32)                  # [bk, d]
+    # sanitize padded value rows (OOB tile reads are unspecified)
+    valid_v = (ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k, 1), 0)) < seq_k
+    v = jnp.where(valid_v, v, 0.0)
+    acc_scratch[...] = acc_scratch[...] * alpha + p @ v
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scratch[...]
+        l = jnp.where(l == 0.0, 1.0, l)                 # fully-masked rows
+        o_ref[...] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,               # [BH, Sq, D]
+    k: jax.Array,               # [BH, Sk, D]
+    v: jax.Array,               # [BH, Sk, D]
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(sk, block_k)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_k=sk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Jit'd public wrapper around the flash-attention Pallas kernel.
+
+``mha(q, k, v)`` takes the framework-wide ``[B, S, H, D]`` layout, handles
+GQA head expansion, and dispatches to the kernel (interpret mode on CPU,
+compiled Mosaic on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "use_kernel"),
+)
+def mha(
+    q: jax.Array,               # [B, Sq, Hq, D]
+    k: jax.Array,               # [B, Sk, Hkv, D]
+    v: jax.Array,               # [B, Sk, Hkv, D]
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_kernel: bool = True,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    if group > 1:               # GQA: expand kv heads
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * hq, sk, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * hq, sk, d)
+    if use_kernel:
+        out = flash_attention(
+            qt, kt, vt, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=not _is_tpu(),
+        )
+    else:
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

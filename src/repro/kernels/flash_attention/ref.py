@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,               # [BH, Sq, D]
+    k: jax.Array,               # [BH, Sk, D]
+    v: jax.Array,               # [BH, Sk, D]
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)       # fully-masked rows
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,103 @@
+"""Fused LoRA matmul Pallas kernel: ``y = x @ W + s * (x @ A) @ B``.
+
+This is the TPU-idiomatic realization of the paper's weight hot-patching
+(§2.1, §4.2): instead of materializing ``W + s·A·B`` in HBM (which would
+specialize — and therefore privatize — a shared base-model replica), the
+low-rank path is fused into the matmul so one clean replica serves many
+requests with different adapters (the sharing that §5.1/§7.3 exploit).
+
+Tiling: grid ``(m_tiles, n_tiles, k_tiles)`` with the k sweep innermost
+(sequential on TPU).  VMEM scratch carries
+
+* ``acc``  — the ``x@W`` partial tile accumulated over k;
+* ``xa``   — the ``x@A`` low-rank projection ``[bm, r]``, accumulated over
+  the k sweep of the FIRST n tile and reused for every later n tile (A
+  depends only on k, not n).
+
+At the last k step the low-rank correction ``s * xa @ B[:, n-tile]`` is
+added and the tile is written out.  ``r`` is padded to the 128-lane MXU
+width; A (``[K, r]``) and the B n-tile (``[r, bn]``) ride in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lora_kernel(
+    x_ref, w_ref, a_ref, b_ref, o_ref,
+    acc_scratch, xa_scratch,
+    *, scale: float,
+):
+    ni = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    x = x_ref[...].astype(jnp.float32)                  # [bm, bk]
+    w = w_ref[...].astype(jnp.float32)                  # [bk, bn]
+    acc_scratch[...] += x @ w
+
+    # accumulate the low-rank projection once per m tile (during the first
+    # n sweep); later n tiles reuse the finished xa
+    @pl.when(ni == 0)
+    def _xa():
+        @pl.when(ki == 0)
+        def _xa_init():
+            xa_scratch[...] = jnp.zeros_like(xa_scratch)
+        a = a_ref[...].astype(jnp.float32)              # [bk, r]
+        xa_scratch[...] += x @ a
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        b = b_ref[...].astype(jnp.float32)              # [r, bn]
+        y = acc_scratch[...] + scale * (xa_scratch[...] @ b)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def lora_matmul(
+    x: jax.Array,               # [M, K]
+    w: jax.Array,               # [K, N]
+    a: jax.Array,               # [K, r]
+    b: jax.Array,               # [r, N]
+    *,
+    scale: float = 1.0,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    r = a.shape[1]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n), pl.cdiv(k, block_k))
+
+    kernel = functools.partial(_lora_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_k, r), lambda mi, ni, ki: (ki, 0)),
+            pl.BlockSpec((r, block_n), lambda mi, ni, ki: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a, b)

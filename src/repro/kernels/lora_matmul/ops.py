@@ -1,0 +1,62 @@
+"""Jit'd wrapper for the fused LoRA matmul kernel.
+
+Pads every dimension to tile multiples (OOB tile contents are unspecified
+on both the interpreter and Mosaic), runs the kernel, slices back.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lora_matmul.kernel import lora_matmul
+from repro.kernels.lora_matmul.ref import lora_matmul_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_m", "block_n", "block_k", "use_kernel")
+)
+def lora_apply(
+    x: jax.Array,               # [..., K]
+    w: jax.Array,               # [K, N]
+    a: jax.Array,               # [K, r]
+    b: jax.Array,               # [r, N]
+    scale: float = 1.0,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return lora_matmul_ref(x, w, a, b, scale=scale)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    x2 = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    ap = _pad_to(a, 0, bk)
+    bp = _pad_to(b, 1, bn)
+    out = lora_matmul(
+        x2, wp, ap, bp, scale=scale,
+        block_m=bm, block_n=bn, block_k=bk, interpret=not _is_tpu(),
+    )
+    return out[:m, :n].reshape(*lead, n)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused LoRA matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                    *, scale: float = 1.0) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    y = y + scale * (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,36 @@
+"""Jit'd wrapper for the RG-LRU scan kernel (pads T and D to tiles)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d", "use_kernel"))
+def rglru(
+    a: jax.Array,               # [B, T, D]
+    x: jax.Array,               # [B, T, D]
+    block_t: int = 128,
+    block_d: int = 128,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return rglru_ref(a, x)
+    b, t, d = a.shape
+    bt, bd = min(block_t, t), min(block_d, d)
+    pt, pd = (-t) % bt, (-d) % bd
+    if pt or pd:
+        # pad decay with 1.0 (identity for the recurrence), inputs with 0
+        a = jnp.pad(a, ((0, 0), (0, pt), (0, pd)), constant_values=1.0)
+        x = jnp.pad(x, ((0, 0), (0, pt), (0, pd)))
+    out = rglru_scan(a, x, block_t=bt, block_d=bd, interpret=not _is_tpu())
+    return out[:, :t, :d]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan (associative-scan formulation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t via jax.lax.associative_scan."""
+    af = a.astype(jnp.float32)
+    xf = x.astype(jnp.float32) * jnp.sqrt(jnp.maximum(1.0 - af * af, 0.0))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, xf), axis=1)
+    return h.astype(x.dtype)

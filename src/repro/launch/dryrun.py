@@ -1,0 +1,415 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+pair on the production meshes, and extract the roofline raw material.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both --out dryrun.json
+
+The two mandatory lines above give jax 512 placeholder CPU devices so
+``jax.make_mesh((2,16,16))`` can build the production mesh — set BEFORE
+any other import, since jax locks the device count on first init.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SKIPS, pairs
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch import sharding as shd
+from repro.launch.hlo_cost import dynamic_costs
+from repro.models import act_sharding
+from repro.models.api import get_family
+from repro.models.base import INPUT_SHAPES, ArchConfig, InputShape
+from repro.models.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.train.optimizer import (AdamWState, AdafactorState, adafactor_init,
+                                   adamw_init)
+
+SERVE_DTYPE = jnp.bfloat16
+TRAIN_DTYPE = jnp.bfloat16          # bf16 params, fp32 AdamW moments
+RING_WINDOW = 8192
+
+
+# Gradient-accumulation policy: keep per-microbatch working set inside
+# v5e HBM.  Drivers: parameter scale (grok), MoE dispatch-buffer tokens
+# (granite), head-count divisibility by the 16-way model axis (whisper's 6
+# and recurrentgemma's 10 heads cannot head-shard their attention
+# matrices), and f32 associative-scan temporaries (xlstm/rglru).
+_ACCUM_OVERRIDE = {
+    "grok-1-314b": 16,          # multi-pod uses 8 (see below)
+    "granite-moe-1b-a400m": 16,
+    "whisper-tiny": 16,
+    "internvl2-2b": 4,
+    "recurrentgemma-2b": 16,
+    "xlstm-1.3b": 4,
+}
+
+
+def accum_steps_for(cfg: ArchConfig, shape: InputShape, multi_pod: bool) -> int:
+    if cfg.name == "grok-1-314b" and multi_pod:
+        return 8                # microbatch 32 = 1/device on the 32-way dp
+    if cfg.name in _ACCUM_OVERRIDE:
+        return _ACCUM_OVERRIDE[cfg.name]
+    p = cfg.param_count()
+    if p > 1e11:
+        return 32
+    if p > 8e9:
+        return 4
+    return 1
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                dtype: Any = jnp.float32) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+    shardable, no device allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = sds((b, s), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), dtype)
+    if cfg.frontend_tokens:
+        out["patches"] = sds((b, cfg.frontend_tokens, cfg.frontend_dim), dtype)
+    return out
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool = False,
+                  mesh=None, act_shard: bool = True,
+                  donate: bool = True):
+    """Lower one (arch × shape × mesh) combination; returns (lowered, meta)."""
+    cfg = ARCHS[arch] if isinstance(arch, str) else arch
+    shape = INPUT_SHAPES[shape_name]
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    axes = tuple(mesh.axis_names)
+    dp = tuple(a for a in axes if a in ("pod", "data"))
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    fam = get_family(cfg)
+    kind = shape.kind
+    fsdp = shd.needs_fsdp(cfg, kind)
+
+    hook = None
+    moe_hook = None
+    if act_shard:
+        act_sharding_spec = NamedSharding(mesh, P(dp_spec, None, "model"))
+        hook = lambda x: jax.lax.with_sharding_constraint(x, act_sharding_spec)
+        if cfg.arch_type == "moe":
+            expert_div = cfg.n_experts % 16 == 0
+            # buffers are [G(roups), E, C, d|ff]; groups ride the data axis
+            moe_specs = {
+                "dispatch": P(dp_spec, "model" if expert_div else None,
+                              None, None),
+                "hidden": P(dp_spec, "model" if expert_div else None, None,
+                            None if expert_div else "model"),
+                "out": P(dp_spec, "model" if expert_div else None,
+                         None, None),
+            }
+
+            def moe_hook(x, role):
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, moe_specs[role]))
+
+    dtype = TRAIN_DTYPE if kind == "train" else SERVE_DTYPE
+    params_shape = jax.eval_shape(
+        lambda k: fam.init(k, cfg, dtype), jax.random.PRNGKey(0))
+    pspecs = shd.sanitize(shd.param_specs(cfg, params_shape, fsdp=fsdp),
+                          params_shape, mesh)
+    batch = input_specs(cfg, shape, dtype)
+    bspecs = shd.sanitize(shd.batch_specs(cfg, axes, kind), batch, mesh)
+
+    meta: Dict[str, Any] = {
+        "arch": cfg.name, "shape": shape_name, "mesh": "x".join(map(str, mesh.devices.shape)),
+        "fsdp": fsdp, "kind": kind,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+
+    dp_count = 32 if multi_pod else 16
+    decode_shards = None
+    if kind == "decode" and cfg.arch_type not in ("ssm", "hybrid")             and shape_name != "long_500k" and act_shard:
+        decode_shards = (mesh, "model", dp_spec)
+    with act_sharding.activation_sharding(hook, moe_hook,
+                                          moe_groups=dp_count,
+                                          decode_shards=decode_shards):
+        if kind == "train":
+            accum = accum_steps_for(cfg, shape, multi_pod)
+            optimizer = "adafactor" if cfg.param_count() > 1e11 else "adamw"
+            meta["accum_steps"] = accum
+            meta["optimizer"] = optimizer
+            step = make_train_step(cfg, accum_steps=accum, optimizer=optimizer)
+            if optimizer == "adamw":
+                opt_shape = jax.eval_shape(adamw_init, params_shape)
+                ospecs = shd.opt_state_specs(pspecs)
+            else:
+                opt_shape = jax.eval_shape(adafactor_init, params_shape)
+                ospecs = shd.adafactor_specs(pspecs)
+            ospecs = shd.sanitize(ospecs, opt_shape, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                              _named(mesh, bspecs)),
+                out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+        elif kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+                out_shardings=NamedSharding(mesh, P(dp_spec, "model")),
+            )
+            lowered = jitted.lower(params_shape, batch)
+        else:  # decode
+            ring = bool(shape_name == "long_500k"
+                        and cfg.arch_type not in ("ssm", "hybrid"))
+            meta["ring"] = ring
+            # fp8 KV cache (serving-standard quantization) when the bf16
+            # cache would crowd out HBM: L*B*S*kv*hd*2(bytes)*2(k,v)/chips
+            cache_gb = (cfg.n_layers * shape.global_batch
+                        * min(shape.seq_len, shape.seq_len)
+                        * cfg.n_kv_heads * cfg.head_dim * 2 * 2) / 256
+            cache_dtype = SERVE_DTYPE
+            if cache_gb > 2 * 2**30 and cfg.arch_type not in ("ssm", "hybrid") \
+                    and not ring:
+                cache_dtype = jnp.float8_e4m3fn
+                meta["kv_dtype"] = "float8_e4m3fn"
+            cache_shape = jax.eval_shape(
+                lambda: fam.init_decode_cache(
+                    cfg, shape.global_batch, shape.seq_len, dtype=cache_dtype,
+                    ring=ring, window=RING_WINDOW,
+                ))
+            cspecs = shd.sanitize(
+                shd.cache_specs(cfg, axes, shape.global_batch, cache_shape),
+                cache_shape, mesh)
+            tok_spec = shd.token_spec(cfg, axes, shape.global_batch)
+            step = make_serve_step(cfg, ring=ring)
+            token = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            tok_dp = tok_spec[0] if len(tok_spec) else None
+            logit_spec = P(tok_dp, "model")
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                              NamedSharding(mesh, tok_spec)),
+                out_shardings=(NamedSharding(mesh, logit_spec),
+                               _named(mesh, cspecs)),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(params_shape, cache_shape, token)
+    return lowered, meta
+
+
+# --------------------------------------------------------------------------
+# Roofline extraction
+# --------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\]))",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_WHILE_LINE = re.compile(
+    r"while\(.*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_COLLECTIVE_LINE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\]))(?:\{[^}]*\})?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Dynamic collective bytes from post-SPMD HLO.
+
+    Collectives inside ``while`` bodies (scans over layers / grad-accum
+    microbatches) execute ``trip_count`` times, so the parser builds the
+    computation call graph, reads each loop's trip count from its
+    condition's comparison constant, and multiplies through — a static
+    count of the HLO text would undercount layer-scan traffic by
+    ~n_layers.  Async pairs are counted once (at -done).
+    """
+    comps = {}
+    cur = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _COMP_HEADER.match(line)
+        if m and ("->" in line):
+            cur = {"coll": {}, "whiles": [], "consts": []}
+            comps[m.group(1)] = cur
+            if raw.startswith("ENTRY"):
+                entry = m.group(1)
+            continue
+        if cur is None:
+            continue
+        for c in _CONST_RE.findall(line):
+            cur["consts"].append(int(c))
+        w = _WHILE_LINE.search(line)
+        if w:
+            cur["whiles"].append((w.group(1), w.group(2)))
+        cm = _COLLECTIVE_LINE.search(line)
+        if cm:
+            shape_txt, op, suffix = cm.group(1), cm.group(2), cm.group(3)
+            if suffix == "-start":
+                continue                      # count async pairs once, at -done
+            cur["coll"][op] = cur["coll"].get(op, 0.0) + _shape_bytes(shape_txt)
+
+    def trip_count(cond_name):
+        cond = comps.get(cond_name)
+        if not cond or not cond["consts"]:
+            return 1
+        return max(1, max(cond["consts"]))
+
+    out = {}
+
+    def walk(name, mult):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op, b in comp["coll"].items():
+            out[op] = out.get(op, 0.0) + b * mult
+        for cond, body in comp["whiles"]:
+            walk(body, mult * trip_count(cond))
+
+    if entry:
+        walk(entry, 1.0)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def analyze(lowered, meta: Dict[str, Any], compile_: bool = True) -> Dict[str, Any]:
+    res = dict(meta)
+    t0 = time.time()
+    compiled = lowered.compile()
+    res["compile_seconds"] = time.time() - t0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    # static values (while bodies counted once) kept for reference
+    res["hlo_flops_static"] = float(ca.get("flops", 0.0))
+    res["hlo_bytes_static"] = float(ca.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        # NOTE: peak_memory_in_bytes degenerates to argument size on the
+        # CPU backend; argument+temp is the honest per-device estimate
+        # (donated outputs alias arguments and do not add)
+        peak = ((getattr(mem, "argument_size_in_bytes", 0) or 0)
+                + (getattr(mem, "temp_size_in_bytes", 0) or 0))
+        res["bytes_per_device"] = {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "alias": getattr(mem, "alias_size_in_bytes", None),
+            "peak": peak,
+        }
+    except Exception as e:  # pragma: no cover
+        res["bytes_per_device"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    dyn = dynamic_costs(hlo)
+    # PER-PARTITION dynamic costs (trip-count weighted)
+    res["hlo_flops"] = dyn["flops"]
+    res["hlo_bytes"] = dyn["bytes"]
+    res["collectives"] = dyn["collectives"]
+    res["per_partition"] = True
+    res["hlo_lines"] = hlo.count("\n")
+    return res
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             act_shard: bool = True) -> Dict[str, Any]:
+    lowered, meta = build_lowered(arch, shape_name, multi_pod=multi_pod,
+                                  act_shard=act_shard)
+    return analyze(lowered, meta)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--no-act-shard", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        todo = pairs()
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        if (args.arch, args.shape) in SKIPS:
+            print(f"SKIP {args.arch} x {args.shape}: "
+                  f"{SKIPS[(args.arch, args.shape)]}")
+            return
+        todo = [(args.arch, args.shape)]
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    results = []
+    for arch, shape in todo:
+        for mp in pods:
+            tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+            t0 = time.time()
+            try:
+                r = run_pair(arch, shape, mp, act_shard=not args.no_act_shard)
+                r["ok"] = True
+                peak = r["bytes_per_device"].get("peak") or 0
+                print(f"OK   {tag}: compile={r['compile_seconds']:.1f}s "
+                      f"flops={r['hlo_flops']:.3e} bytes={r['hlo_bytes']:.3e} "
+                      f"coll={r['collectives'].get('total', 0):.3e} "
+                      f"peak/device={peak/2**30:.2f}GiB", flush=True)
+            except Exception as e:
+                r = {"arch": arch, "shape": shape, "ok": False,
+                     "multi_pod": mp, "error": f"{type(e).__name__}: {e}"}
+                print(f"FAIL {tag}: {r['error']}", flush=True)
+            r["wall_seconds"] = time.time() - t0
+            results.append(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    n_fail = sum(1 for r in results if not r.get("ok"))
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

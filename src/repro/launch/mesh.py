@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches JAX device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any JAX
+import; everything else must keep seeing the 1 real CPU device).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    try:
+        return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+    except TypeError:
+        from jax.sharding import Mesh
+
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return Mesh(devs, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The batch-parallel axes of a mesh ('pod' extends 'data')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def small_mesh(data: int = 1, model: int = 1):
+    """Reduced mesh over the real local devices (tests)."""
+    import jax
+
+    from jax.sharding import Mesh
+
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))

@@ -1,0 +1,230 @@
+"""GSPMD sharding rules for every architecture family × step kind.
+
+Conventions (DESIGN.md §5):
+
+* weights — last ("output") dim over ``model``; for FSDP-scale archs the
+  other matrix dim additionally over ``data`` (GSPMD then all-gathers at
+  use, ZeRO-3 style);
+* projections back into the residual stream (``wo``/``*down``) have their
+  *contraction* dim model-sharded instead, giving the classic Megatron
+  pairing (no resharding between the two halves of a block);
+* embeddings vocab-sharded over ``model``;
+* batch over ``(pod, data)``; decode KV caches sequence-sharded over
+  ``model`` (kv_heads=8 < model=16 rules out head sharding);
+* MoE experts over ``model`` when divisible (granite 32e), else
+  tensor-parallel within every expert (grok 8e over a 16-way axis);
+* norms/scalars replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.base import ArchConfig, InputShape
+
+# leaf names whose LAST dim feeds the residual stream (contraction dim is
+# the sharded one)
+_DOWN_NAMES = ("wo", "w_down", "moe_down", "mlp_down", "w_out", "cwo",
+               "dec_out")
+# leaf names that are never sharded
+_REPLICATED = ("norm", "lam", "ada_b", "final_ada_b", "pos")
+
+
+def _leaf_name(path) -> str:
+    parts = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    return str(parts[-1]) if parts else ""
+
+
+def _group_name(path) -> str:
+    parts = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+    return parts[0] if parts else ""
+
+
+def _matrix_spec(name: str, ndim: int, stack_dims: int, fsdp: bool,
+                 cfg: ArchConfig) -> P:
+    """Spec for a [*stack, d_in, d_out]-shaped weight."""
+    lead = (None,) * stack_dims
+    other = "data" if fsdp else None
+    if any(k in name for k in _DOWN_NAMES):
+        return P(*lead, "model", other)
+    return P(*lead, other, "model")
+
+
+def param_specs(cfg: ArchConfig, params: Any, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params`` (built from eval_shape)."""
+
+    def spec_for(path, leaf) -> P:
+        name = _leaf_name(path)
+        group = _group_name(path)
+        ndim = len(leaf.shape)
+        if any(k in name for k in _REPLICATED) or ndim <= 1:
+            return P()
+        if name == "embed":
+            return P("model", "data" if fsdp else None)
+        if name == "lm_head":
+            return P("data" if fsdp else None, "model")
+        if name == "projector":
+            return P(None, "model")
+        if name == "conv":                       # [*, W, d]
+            return P(*(None,) * (ndim - 1), "model")
+        if name == "router":                     # [L, d, E] — tiny
+            return P()
+        # stacked expert weights [L, E, din, dout]
+        if name.startswith("moe_"):
+            if cfg.n_experts % 16 == 0:
+                other = "data" if fsdp else None
+                if "down" in name:
+                    return P(None, "model", "data" if fsdp else None, None)
+                return P(None, "model", other, None)
+            # experts not divisible by the model axis: TP within experts
+            if "down" in name:
+                return P(None, None, "model", "data" if fsdp else None)
+            return P(None, None, "data" if fsdp else None, "model")
+        # generic stacked matrices: infer stack dims = ndim - 2
+        return _matrix_spec(name, ndim, ndim - 2, fsdp, cfg)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_state_specs(pspecs: Any) -> Any:
+    """AdamW state mirrors the parameter sharding (ZeRO: moments live with
+    their shards)."""
+    from repro.train.optimizer import AdamWState
+
+    return AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+
+def batch_specs(cfg: ArchConfig, mesh_axes: Tuple[str, ...],
+                kind: str) -> Dict[str, P]:
+    dp = tuple(a for a in mesh_axes if a in ("pod", "data"))
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.is_encoder_decoder:
+        out["frames"] = P(dp, None, None)
+    if cfg.frontend_tokens:
+        out["patches"] = P(dp, None, None)
+    if kind != "train":
+        out.pop("labels")
+    return out
+
+
+def cache_specs(cfg: ArchConfig, mesh_axes: Tuple[str, ...],
+                batch: int, cache: Any) -> Any:
+    """Sharding for decode caches/states (family-dependent pytrees)."""
+    dp_axes = tuple(a for a in mesh_axes if a in ("pod", "data"))
+    n_dp = 1
+    # batch shardability: long_500k has batch 1 -> replicate batch axis
+    import numpy as np
+    dp: Any = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    if dp is not None:
+        sizes = {"pod": 2, "data": 16}
+        n_dp = int(np.prod([sizes[a] for a in dp_axes]))
+        if batch % n_dp != 0:
+            dp = None
+
+    def spec_for(path, leaf) -> P:
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        if name in ("k", "v"):            # [L, B, S, kv, hd] — seq over model
+            return P(None, dp, "model", None, None)
+        if name in ("ak", "av"):          # hybrid: [S, 1, B, W, kv, hd]
+            return P(None, None, dp, "model", None, None)
+        if name == "enc_out":             # [B, enc_seq, d]
+            return P(dp, None, "model")
+        if name == "C":                   # mlstm [S, M, B, H, dk, dv]
+            return P(None, None, dp, None, "model", None)
+        if name == "C_rem":
+            return P(None, dp, None, "model", None)
+        if name == "n":                   # [S, M, B, H, dk]
+            return P(None, None, dp, None, "model")
+        if name == "n_rem":
+            return P(None, dp, None, "model")
+        if name == "c_s":                 # [S, B, d]
+            return P(None, dp, "model")
+        if name == "h":                   # hybrid [S, 2, B, d]
+            return P(None, None, dp, "model")
+        if name == "h_rem":
+            return P(None, dp, "model")
+        if name == "tail":                # [S, 2, B, W-1, d]
+            return P(None, None, dp, None, "model")
+        if name == "tail_rem":
+            return P(None, dp, None, "model")
+        if name == "pos" or ndim == 0:
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def token_spec(cfg: ArchConfig, mesh_axes: Tuple[str, ...], batch: int) -> P:
+    import numpy as np
+    dp_axes = tuple(a for a in mesh_axes if a in ("pod", "data"))
+    sizes = {"pod": 2, "data": 16}
+    n_dp = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+    if batch % max(1, n_dp) != 0:
+        return P(None)
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    return P(dp)
+
+
+def sanitize(spec_tree: Any, shape_tree: Any, mesh) -> Any:
+    """Drop axis assignments that do not evenly divide the dimension —
+    jit argument shardings must divide exactly (unlike internal GSPMD
+    constraints, which pad)."""
+    import numpy as np
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        dims = leaf.shape
+        new = []
+        for i, a in enumerate(spec):
+            if a is None or i >= len(dims):
+                new.append(None)
+                continue
+            axes = a if isinstance(a, tuple) else (a,)
+            need = int(np.prod([sizes[x] for x in axes]))
+            new.append(a if dims[i] % need == 0 else None)
+        return P(*new)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def needs_fsdp(cfg: ArchConfig, kind: str) -> bool:
+    """FSDP when replicated weights (+moments for train) would not fit."""
+    p = cfg.param_count()
+    per_model_shard = p / 16.0
+    if kind == "train":
+        # bf16 params+grads (2+2) and fp32 moments (8) per parameter
+        return per_model_shard * 12.0 > 8e9
+    # serve: weights beyond ~2 GiB/shard leave too little HBM for the
+    # 32k KV caches -> ZeRO-inference style gather-on-use
+    return per_model_shard * 2.0 > 2e9
+
+
+def adafactor_specs(pspecs: Any) -> Any:
+    """Adafactor row/col stats: drop the reduced dim from the param spec."""
+    from repro.train.optimizer import AdafactorState
+
+    def row(spec):
+        if not isinstance(spec, P) or len(spec) < 2:
+            return spec if isinstance(spec, P) else P()
+        return P(*spec[:-1])
+
+    def col(spec):
+        if not isinstance(spec, P) or len(spec) < 2:
+            return P()
+        return P(*spec[:-2], spec[-1])
+
+    is_p = lambda x: isinstance(x, P)
+    return AdafactorState(
+        step=P(),
+        vr=jax.tree.map(row, pspecs, is_leaf=is_p),
+        vc=jax.tree.map(col, pspecs, is_leaf=is_p),
+    )

@@ -1,0 +1,44 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU-reduced by default (``--reduced``); with ``--mesh`` it lowers the step
+onto the production mesh (dry-run semantics — see dryrun.py for the full
+matrix).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+    from repro.data import DataConfig
+    from repro.train import TrainConfig, train
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    out = train(
+        cfg,
+        DataConfig(batch_size=args.batch, seq_len=args.seq),
+        TrainConfig(steps=args.steps, optimizer=args.optimizer,
+                    checkpoint_dir=args.checkpoint_dir),
+    )
+    print(f"final loss: {out['losses'][-1]:.4f} "
+          f"(first: {out['losses'][0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Activation-sharding hook.
+
+The launcher installs a constraint function (usually
+``with_sharding_constraint(x, P(('pod','data'), None, 'model'))``) that the
+model stacks apply to every residual-stream boundary tensor ``[B, S, d]``.
+This is the Megatron-style sequence/hidden sharding that keeps per-layer
+scan carries from replicating across the model axis — without it the remat
+boundaries of the large archs (grok-1 train) exceed v5e HBM.
+
+Kept as a module-level hook so model code stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Optional
+
+_HOOK: Optional[Callable[[Any], Any]] = None
+_MOE_HOOK: Optional[Callable[[Any, str], Any]] = None
+# GShard-style dispatch groups: tokens are split into G groups (one per
+# data shard) so routing sort + capacity scatter stay group-local — the
+# global-scatter formulation forced GSPMD to replicate multi-GB buffers.
+_MOE_GROUPS: int = 1
+# (mesh, axis) for shard_map flash-decode over the seq-sharded KV cache
+_DECODE_SHARDS: Optional[Any] = None
+
+
+def moe_groups() -> int:
+    return _MOE_GROUPS
+
+
+def decode_shards() -> Optional[Any]:
+    return _DECODE_SHARDS
+
+
+def set_hook(fn: Optional[Callable[[Any], Any]]) -> None:
+    global _HOOK
+    _HOOK = fn
+
+
+def constrain(x: Any) -> Any:
+    if _HOOK is not None and getattr(x, "ndim", 0) == 3:
+        return _HOOK(x)
+    return x
+
+
+def constrain_moe(x: Any, role: str) -> Any:
+    """Constrain MoE dispatch buffers: role in {dispatch, hidden, out}."""
+    if _MOE_HOOK is not None:
+        return _MOE_HOOK(x, role)
+    return x
+
+
+@contextlib.contextmanager
+def activation_sharding(fn: Optional[Callable[[Any], Any]],
+                        moe_fn: Optional[Callable[[Any, str], Any]] = None,
+                        moe_groups: int = 1,
+                        decode_shards: Optional[Any] = None):
+    global _HOOK, _MOE_HOOK, _MOE_GROUPS, _DECODE_SHARDS
+    prev = (_HOOK, _MOE_HOOK, _MOE_GROUPS, _DECODE_SHARDS)
+    _HOOK, _MOE_HOOK, _MOE_GROUPS, _DECODE_SHARDS = (
+        fn, moe_fn, moe_groups, decode_shards)
+    try:
+        yield
+    finally:
+        _HOOK, _MOE_HOOK, _MOE_GROUPS, _DECODE_SHARDS = prev

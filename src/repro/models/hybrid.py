@@ -1,0 +1,254 @@
+"""RecurrentGemma / Griffin hybrid stack: RG-LRU blocks + local attention.
+
+[arXiv:2402.19427]  Pattern is (recurrent, recurrent, local-attention)
+repeating — "1:2" in the assignment.  Each residual block is
+``norm -> temporal mixing -> residual; norm -> gated MLP -> residual``.
+
+The RG-LRU temporal mixer:
+
+    r_t = sigmoid(W_r x_t)            (recurrence gate)
+    i_t = sigmoid(W_i x_t)            (input gate)
+    a_t = exp(-c * softplus(L) * r_t) (decay, elementwise)
+    h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * u_t)
+
+with a width-4 causal conv in front (Griffin).  The scan runs through the
+:mod:`repro.kernels.rglru_scan` oracle formulation (associative scan) in
+compiled code; the Pallas kernel is the TPU drop-in.
+
+Local attention uses GQA with ``n_kv_heads=1`` (MQA) and a sliding window,
+making the whole architecture O(seq) — it runs long_500k natively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.ref import rglru_ref
+from repro.models.base import ArchConfig
+from repro.models.act_sharding import constrain
+from repro.models import transformer as tfm
+from repro.nn.layers import mask_vocab, dense_init, embed_init, rms_norm, rope_frequencies, split
+
+Params = Dict[str, Any]
+
+PATTERN = ("r", "r", "a")
+CONV_WIDTH = 4
+LOCAL_WINDOW = 2048
+RGLRU_C = 8.0
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_rglru_block(key: jax.Array, cfg: ArchConfig, dtype: Any) -> Params:
+    d = cfg.d_model
+    ks = split(key, 8)
+    return {
+        "norm1": jnp.ones((d,), dtype),
+        "w_in": dense_init(ks[0], d, d, dtype),
+        "w_gate_branch": dense_init(ks[1], d, d, dtype),
+        "conv": (jax.random.normal(ks[2], (CONV_WIDTH, d), dtype=jnp.float32)
+                 * 0.1).astype(dtype),
+        "w_r": dense_init(ks[3], d, d, dtype),
+        "w_i": dense_init(ks[4], d, d, dtype),
+        "lam": jnp.full((d,), 0.5, dtype),
+        "w_out": dense_init(ks[5], d, d, dtype),
+        "norm2": jnp.ones((d,), dtype),
+        "mlp_gate": dense_init(ks[6], d, cfg.d_ff, dtype),
+        "mlp_up": dense_init(ks[7], d, cfg.d_ff, dtype),
+        "mlp_down": dense_init(split(ks[0], 2)[1], cfg.d_ff, d, dtype),
+    }
+
+
+def _init_attn_block(key: jax.Array, cfg: ArchConfig, dtype: Any) -> Params:
+    return tfm._init_block(key, dataclasses.replace(cfg, arch_type="dense"), dtype)
+
+
+def init_params(key: jax.Array, cfg: ArchConfig, dtype: Any = jnp.float32) -> Params:
+    ks = split(key, 6)
+    n_super, rem = divmod(cfg.n_layers, len(PATTERN))
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[1], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+    if n_super:
+        rk = jax.random.split(ks[2], n_super * 2).reshape(n_super, 2, 2)
+        ak = jax.random.split(ks[3], n_super).reshape(n_super, 1, 2)
+        p["rglru"] = jax.vmap(jax.vmap(
+            lambda k: _init_rglru_block(k, cfg, dtype)))(rk)
+        p["attn"] = jax.vmap(jax.vmap(
+            lambda k: _init_attn_block(k, cfg, dtype)))(ak)
+    if rem:
+        xk = jax.random.split(ks[4], rem).reshape(rem, 2)
+        p["rem_rglru"] = jax.vmap(lambda k: _init_rglru_block(k, cfg, dtype))(xk)
+    return p
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block
+# --------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 tail: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv width-4.  ``tail``: [B, W-1, d] carry-in."""
+    b, s, d = x.shape
+    if tail is None:
+        tail = jnp.zeros((b, CONV_WIDTH - 1, d), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i : i + s] * w[i] for i in range(CONV_WIDTH))
+    return out, xp[:, -(CONV_WIDTH - 1):]
+
+
+def rglru_block(p: Params, x: jax.Array, cfg: ArchConfig,
+                state: Optional[Tuple] = None) -> Tuple[jax.Array, Tuple]:
+    xn = rms_norm(x, p["norm1"])
+    u = xn @ p["w_in"]
+    gate = jax.nn.gelu(xn @ p["w_gate_branch"])
+    tail = state[1] if state is not None else None
+    u, new_tail = _causal_conv(u, p["conv"], tail)
+    r = jax.nn.sigmoid(xn @ p["w_r"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xn @ p["w_i"]).astype(jnp.float32)
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    xin = (i * u.astype(jnp.float32))
+    if state is not None and state[0] is not None:
+        # carry-in: h_0 enters as an extra decayed contribution on step 1
+        xin = xin.at[:, 0].add(
+            a[:, 0] * state[0] / jnp.sqrt(jnp.maximum(1 - a[:, 0] ** 2, 1e-6)))
+    h = rglru_ref(a, xin)
+    new_h = h[:, -1]
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])
+    x = x + out
+    # gated MLP
+    xn2 = rms_norm(x, p["norm2"])
+    y = (jax.nn.gelu(xn2 @ p["mlp_gate"]) * (xn2 @ p["mlp_up"])) @ p["mlp_down"]
+    return x + y, (new_h, new_tail)
+
+
+def rglru_block_decode(p: Params, x: jax.Array, cfg: ArchConfig,
+                       state: Tuple) -> Tuple[jax.Array, Tuple]:
+    """x: [B,1,d]; state = (h [B,d] fp32, conv tail [B,3,d])."""
+    h_prev, tail = state
+    xn = rms_norm(x, p["norm1"])
+    u = xn @ p["w_in"]
+    gate = jax.nn.gelu(xn @ p["w_gate_branch"])
+    xp = jnp.concatenate([tail, u], axis=1)               # [B, W, d]
+    u1 = jnp.einsum("bwd,wd->bd", xp, p["conv"])[:, None]
+    r = jax.nn.sigmoid(xn @ p["w_r"]).astype(jnp.float32)[:, 0]
+    i = jax.nn.sigmoid(xn @ p["w_i"]).astype(jnp.float32)[:, 0]
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1 - a * a, 0.0)) * (i * u1[:, 0].astype(jnp.float32))
+    out = ((h[:, None].astype(x.dtype) * gate) @ p["w_out"])
+    x = x + out
+    xn2 = rms_norm(x, p["norm2"])
+    y = (jax.nn.gelu(xn2 @ p["mlp_gate"]) * (xn2 @ p["mlp_up"])) @ p["mlp_down"]
+    return x + y, (h, xp[:, 1:])
+
+
+# --------------------------------------------------------------------------
+# full stack
+# --------------------------------------------------------------------------
+
+def _attn_cfg(cfg: ArchConfig) -> ArchConfig:
+    return dataclasses.replace(cfg, arch_type="dense",
+                               sliding_window=LOCAL_WINDOW)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jax.Array,
+            remat: bool = True, last_only: bool = False, **_: Any) -> jax.Array:
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(params["lm_head"].dtype)
+    acfg = _attn_cfg(cfg)
+    rope = rope_frequencies(cfg.head_dim, s, cfg.rope_theta)
+    n_super, rem = divmod(cfg.n_layers, len(PATTERN))
+
+    def super_body(x, xs):
+        rp, ap = xs
+        for j in range(2):
+            rj = jax.tree.map(lambda a: a[j], rp)
+            x, _ = rglru_block(rj, x, cfg)
+        a0 = jax.tree.map(lambda a: a[0], ap)
+        x, _ = tfm.block_apply(a0, x, acfg, rope, causal=True,
+                               window=LOCAL_WINDOW)
+        return constrain(x), None
+
+    if n_super:
+        body = jax.checkpoint(super_body) if remat else super_body
+        x, _ = jax.lax.scan(body, constrain(x), (params["rglru"], params["attn"]))
+    if rem:
+        def rem_body(x, rp):
+            x, _ = rglru_block(rp, x, cfg)
+            return x, None
+        x, _ = jax.lax.scan(rem_body, x, params["rem_rglru"])
+    x = rms_norm(x, params["final_norm"])
+    if last_only:
+        x = x[:, -1:]
+    return mask_vocab(x @ params["lm_head"], cfg.vocab)
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                      dtype: Any = jnp.bfloat16, **_: Any) -> Dict[str, Any]:
+    n_super, rem = divmod(cfg.n_layers, len(PATTERN))
+    d = cfg.d_model
+    win = min(LOCAL_WINDOW, seq_len)
+    cache: Dict[str, Any] = {
+        "h": jnp.zeros((n_super, 2, batch, d), jnp.float32),
+        "tail": jnp.zeros((n_super, 2, batch, CONV_WIDTH - 1, d), dtype),
+        "ak": jnp.zeros((n_super, 1, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "av": jnp.zeros((n_super, 1, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if rem:
+        cache["h_rem"] = jnp.zeros((rem, batch, d), jnp.float32)
+        cache["tail_rem"] = jnp.zeros((rem, batch, CONV_WIDTH - 1, d), dtype)
+    return cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                token: jax.Array, **_: Any) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = params["embed"][token][:, None, :].astype(params["lm_head"].dtype)
+    acfg = _attn_cfg(cfg)
+    pos = cache["pos"]
+    win = cache["ak"].shape[3]
+    rope = rope_frequencies(cfg.head_dim, win, cfg.rope_theta)
+    n_super, rem = divmod(cfg.n_layers, len(PATTERN))
+
+    def super_body(x, xs):
+        rp, ap, h, tail, ak, av = xs
+        hs, tails = [], []
+        for j in range(2):
+            rj = jax.tree.map(lambda a: a[j], rp)
+            x, (hj, tj) = rglru_block_decode(rj, x, cfg, (h[j], tail[j]))
+            hs.append(hj)
+            tails.append(tj)
+        a0 = jax.tree.map(lambda a: a[0], ap)
+        x2, (nk, nv) = tfm._decode_attn_ring(a0, x, acfg, rope, pos, ak[0], av[0])
+        x = tfm._mlp(a0, x2, acfg)
+        return x, (jnp.stack(hs), jnp.stack(tails), nk[None], nv[None])
+
+    new_cache = dict(cache)
+    if n_super:
+        x, (h, tail, ak, av) = jax.lax.scan(
+            super_body, x,
+            (params["rglru"], params["attn"], cache["h"], cache["tail"],
+             cache["ak"], cache["av"]),
+        )
+        new_cache.update(h=h, tail=tail, ak=ak, av=av)
+    if rem:
+        def rem_body(x, xs):
+            rp, h, tail = xs
+            x, (hj, tj) = rglru_block_decode(rp, x, cfg, (h, tail))
+            return x, (hj, tj)
+        x, (hr, tr) = jax.lax.scan(
+            rem_body, x, (params["rem_rglru"], cache["h_rem"], cache["tail_rem"]))
+        new_cache.update(h_rem=hr, tail_rem=tr)
+    x = rms_norm(x, params["final_norm"])
+    new_cache["pos"] = pos + 1
+    return mask_vocab((x @ params["lm_head"])[:, 0], cfg.vocab), new_cache

@@ -1,0 +1,321 @@
+"""xLSTM stack (mLSTM matrix-memory + sLSTM scalar-memory blocks).
+
+[arXiv:2405.04517]  The assigned xlstm-1.3b config is 48 blocks, 4 heads,
+d_model 2048, no separate FFN (d_ff=0): temporal mixing carries the
+capacity.  Pattern: 7 mLSTM : 1 sLSTM per super-block (the paper's 7:1).
+
+mLSTM uses the **chunked linear-attention formulation** (TPU adaptation:
+the per-token outer-product recurrence is hostile to the MXU, while the
+chunked form is matmul-dominant):
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T          (matrix memory, per head)
+    n_t = f_t n_{t-1} + i_t k_t                (normalizer)
+    h_t = (q_t C_t) / max(|q_t . n_t|, 1)
+
+with scalar-per-head gates f (sigmoid) and i (sigmoid — a stability
+simplification of xLSTM's exponential gate; noted in DESIGN.md).  The
+chunk size trades intra-chunk attention FLOPs against state-passing
+steps; decode is the exact O(1) recurrence.
+
+sLSTM blocks are per-channel scalar recurrences evaluated with an
+associative scan (c_t = f_t c_{t-1} + i_t z_t, h = o ⊙ c).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+from repro.models.act_sharding import constrain
+from repro.nn.layers import mask_vocab, dense_init, embed_init, rms_norm, split
+
+Params = Dict[str, Any]
+
+PATTERN = ("m",) * 7 + ("s",)       # 7 mLSTM : 1 sLSTM
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_mlstm(key: jax.Array, cfg: ArchConfig, dtype: Any) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    ks = split(key, 6)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wif": dense_init(ks[3], d, 2 * h, dtype),   # input+forget gates
+        "wo": dense_init(ks[4], d, d, dtype),
+        "wog": dense_init(ks[5], d, d, dtype),       # output gate
+    }
+
+
+def _init_slstm(key: jax.Array, cfg: ArchConfig, dtype: Any) -> Params:
+    d = cfg.d_model
+    ks = split(key, 5)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "wz": dense_init(ks[0], d, d, dtype),
+        "wi": dense_init(ks[1], d, d, dtype),
+        "wf": dense_init(ks[2], d, d, dtype),
+        "wo_gate": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+    }
+
+
+def init_params(key: jax.Array, cfg: ArchConfig, dtype: Any = jnp.float32) -> Params:
+    ks = split(key, 5)
+    n_super, rem = divmod(cfg.n_layers, len(PATTERN))
+    n_m = PATTERN.count("m")
+    mk = jax.random.split(ks[0], max(1, n_super) * n_m).reshape(max(1, n_super), n_m, 2)
+    sk = jax.random.split(ks[1], max(1, n_super)).reshape(max(1, n_super), 1, 2)
+    p: Params = {
+        "embed": embed_init(ks[2], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[3], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+    if n_super:
+        p["mlstm"] = jax.vmap(jax.vmap(lambda k: _init_mlstm(k, cfg, dtype)))(mk)
+        p["slstm"] = jax.vmap(jax.vmap(lambda k: _init_slstm(k, cfg, dtype)))(sk)
+    if rem:
+        rk = jax.random.split(ks[4], rem).reshape(rem, 2)
+        p["rem_mlstm"] = jax.vmap(lambda k: _init_mlstm(k, cfg, dtype))(rk)
+    return p
+
+
+# --------------------------------------------------------------------------
+# mLSTM chunked forward
+# --------------------------------------------------------------------------
+
+def _mlstm_gates(p, xn, cfg):
+    b, s, d = xn.shape
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    q = (xn @ p["wq"]).reshape(b, s, h, hd)
+    k = (xn @ p["wk"]).reshape(b, s, h, hd) / jnp.sqrt(hd).astype(xn.dtype)
+    v = (xn @ p["wv"]).reshape(b, s, h, hd)
+    gif = xn @ p["wif"]
+    ig = jax.nn.sigmoid(gif[..., :h])                    # [b,s,h]
+    lf = jax.nn.log_sigmoid(gif[..., h:].astype(jnp.float32))  # log forget
+    return q, k, v, ig, lf
+
+
+def mlstm_chunked(p: Params, x: jax.Array, cfg: ArchConfig,
+                  state: Optional[Tuple] = None) -> Tuple[jax.Array, Tuple]:
+    """x: [B,S,d]; S must be a multiple of cfg.ssm_chunk (pad upstream)."""
+    b, s, d = x.shape
+    hh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    c = min(cfg.ssm_chunk, s)
+    n_chunks = s // c
+    xn = rms_norm(x, p["norm"])
+    q, k, v, ig, lf = _mlstm_gates(p, xn, cfg)
+    # reshape into chunks: [B, N, c, ...]
+    rc = lambda a: a.reshape(b, n_chunks, c, *a.shape[2:])
+    q, k, v, ig, lf = rc(q), rc(k), rc(v), rc(ig), rc(lf)
+
+    if state is None:
+        C0 = jnp.zeros((b, hh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, hh, hd), jnp.float32)
+    else:
+        C0, n0 = state
+
+    def chunk_body(carry, xs):
+        C, n = carry
+        qc, kc, vc, igc, lfc = xs                # [B, c, ...]
+        L = jnp.cumsum(lfc, axis=1)              # [B, c, H] inclusive decay
+        decay_in = jnp.exp(L)                    # contribution of prior state
+        # inter-chunk term
+        h_inter = jnp.einsum("bthd,bhde->bthe", qc * decay_in[..., None], C)
+        n_inter = jnp.einsum("bthd,bhd->bth", qc * decay_in[..., None], n)
+        # intra-chunk masked linear attention
+        rel = L[:, :, None, :] - L[:, None, :, :]        # [B, t, s, H]
+        tmask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])
+        w = jnp.where(tmask[None, :, :, None], jnp.exp(rel), 0.0)
+        w = w * igc[:, None, :, :]                       # weight by input gate
+        scores = jnp.einsum("bthd,bshd->btsh", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32))
+        sw = scores * w
+        h_intra = jnp.einsum("btsh,bshe->bthe", sw, vc.astype(jnp.float32))
+        n_intra = jnp.sum(sw, axis=2)                    # q_t . n_t (intra)
+        num = h_inter + h_intra                          # [B, c, H, hd]
+        den = n_inter + n_intra                          # [B, c, H]
+        hout = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update to end of chunk
+        tail = jnp.exp(L[:, -1:, :] - L)                 # decay from s to end
+        kw = kc.astype(jnp.float32) * (igc * tail)[..., None]
+        C_new = C * jnp.exp(L[:, -1])[:, :, None, None] \
+            + jnp.einsum("bshd,bshe->bhde", kw, vc.astype(jnp.float32))
+        n_new = n * jnp.exp(L[:, -1])[:, :, None] \
+            + jnp.sum(kw, axis=1)
+        return (C_new, n_new), hout
+
+    xs = tuple(a.transpose(1, 0, *range(2, a.ndim)) for a in (q, k, v, ig, lf))
+    (C, n), hs = jax.lax.scan(chunk_body, (C0, n0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, hh * hd)
+    og = jax.nn.sigmoid(xn @ p["wog"])
+    out = (h.astype(x.dtype) * og) @ p["wo"]
+    return x + out, (C, n)
+
+
+def mlstm_decode(p: Params, x: jax.Array, cfg: ArchConfig,
+                 state: Tuple) -> Tuple[jax.Array, Tuple]:
+    """x: [B,1,d] — exact single-step recurrence."""
+    b, s, d = x.shape
+    hh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    xn = rms_norm(x, p["norm"])
+    q, k, v, ig, lf = _mlstm_gates(p, xn, cfg)
+    C, n = state
+    f = jnp.exp(lf[:, 0])                                # [B,H]
+    i = ig[:, 0]
+    kv = jnp.einsum("bhd,bhe->bhde", k[:, 0].astype(jnp.float32),
+                    v[:, 0].astype(jnp.float32))
+    C = C * f[..., None, None] + kv * i[..., None, None]
+    n = n * f[..., None] + k[:, 0].astype(jnp.float32) * i[..., None]
+    num = jnp.einsum("bhd,bhde->bhe", q[:, 0].astype(jnp.float32), C)
+    den = jnp.einsum("bhd,bhd->bh", q[:, 0].astype(jnp.float32), n)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    h = h.reshape(b, 1, hh * hd)
+    og = jax.nn.sigmoid(xn @ p["wog"])
+    out = (h.astype(x.dtype) * og) @ p["wo"]
+    return x + out, (C, n)
+
+
+# --------------------------------------------------------------------------
+# sLSTM (scalar memory, associative scan)
+# --------------------------------------------------------------------------
+
+def slstm_forward(p: Params, x: jax.Array, cfg: ArchConfig,
+                  state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    xn = rms_norm(x, p["norm"])
+    z = jnp.tanh(xn @ p["wz"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xn @ p["wi"]).astype(jnp.float32)
+    f = jax.nn.sigmoid(xn @ p["wf"]).astype(jnp.float32)
+    o = jax.nn.sigmoid(xn @ p["wo_gate"])
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    iz = i * z
+    if state is not None:
+        # fold carry-in: first element absorbs f_1 * c_0
+        iz = iz.at[:, 0].add(f[:, 0] * state)
+    _, cseq = jax.lax.associative_scan(combine, (f, iz), axis=1)
+    out = ((o * cseq.astype(x.dtype)) @ p["wo"])
+    return x + out, cseq[:, -1]
+
+
+def slstm_decode(p: Params, x: jax.Array, cfg: ArchConfig,
+                 state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xn = rms_norm(x, p["norm"])
+    z = jnp.tanh(xn @ p["wz"])[:, 0].astype(jnp.float32)
+    i = jax.nn.sigmoid(xn @ p["wi"])[:, 0].astype(jnp.float32)
+    f = jax.nn.sigmoid(xn @ p["wf"])[:, 0].astype(jnp.float32)
+    o = jax.nn.sigmoid(xn @ p["wo_gate"])
+    c = f * state + i * z
+    out = ((o * c[:, None].astype(x.dtype)) @ p["wo"])
+    return x + out, c
+
+
+# --------------------------------------------------------------------------
+# Full stack
+# --------------------------------------------------------------------------
+
+def _super_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    return divmod(cfg.n_layers, len(PATTERN))
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jax.Array,
+            remat: bool = True, last_only: bool = False, **_: Any) -> jax.Array:
+    b, s = tokens.shape
+    c = min(cfg.ssm_chunk, s)
+    pad = (-s) % c
+    x = params["embed"][tokens].astype(params["lm_head"].dtype)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    n_super, rem = _super_layout(cfg)
+    n_m = PATTERN.count("m")
+
+    def super_body(x, xs):
+        mp, sp = xs
+        for j in range(n_m):
+            mj = jax.tree.map(lambda a: a[j], mp)
+            x, _ = mlstm_chunked(mj, x, cfg)
+        s0 = jax.tree.map(lambda a: a[0], sp)
+        x, _ = slstm_forward(s0, x, cfg)
+        return constrain(x), None
+
+    if n_super:
+        body = jax.checkpoint(super_body) if remat else super_body
+        x, _ = jax.lax.scan(body, constrain(x), (params["mlstm"], params["slstm"]))
+    if rem:
+        def rem_body(x, mp):
+            x, _ = mlstm_chunked(mp, x, cfg)
+            return x, None
+        x, _ = jax.lax.scan(rem_body, x, params["rem_mlstm"])
+    if pad:
+        x = x[:, :s]
+    x = rms_norm(x, params["final_norm"])
+    if last_only:
+        x = x[:, -1:]
+    return mask_vocab(x @ params["lm_head"], cfg.vocab)
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                      dtype: Any = jnp.bfloat16, **_: Any) -> Dict[str, Any]:
+    n_super, rem = _super_layout(cfg)
+    hh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    cache = {
+        "C": jnp.zeros((n_super, PATTERN.count("m"), batch, hh, hd, hd), jnp.float32),
+        "n": jnp.zeros((n_super, PATTERN.count("m"), batch, hh, hd), jnp.float32),
+        "c_s": jnp.zeros((n_super, batch, cfg.d_model), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if rem:
+        cache["C_rem"] = jnp.zeros((rem, batch, hh, hd, hd), jnp.float32)
+        cache["n_rem"] = jnp.zeros((rem, batch, hh, hd), jnp.float32)
+    return cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                token: jax.Array, **_: Any) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = params["embed"][token][:, None, :].astype(params["lm_head"].dtype)
+    n_super, rem = _super_layout(cfg)
+    n_m = PATTERN.count("m")
+
+    def super_body(x, xs):
+        mp, sp, C, n, c_s = xs
+        newC, newn = [], []
+        for j in range(n_m):
+            mj = jax.tree.map(lambda a: a[j], mp)
+            x, (Cj, nj) = mlstm_decode(mj, x, cfg, (C[j], n[j]))
+            newC.append(Cj)
+            newn.append(nj)
+        s0 = jax.tree.map(lambda a: a[0], sp)
+        x, c_s = slstm_decode(s0, x, cfg, c_s)
+        return x, (jnp.stack(newC), jnp.stack(newn), c_s)
+
+    new_cache = dict(cache)
+    if n_super:
+        x, (C, n, c_s) = jax.lax.scan(
+            super_body, x,
+            (params["mlstm"], params["slstm"], cache["C"], cache["n"], cache["c_s"]),
+        )
+        new_cache.update(C=C, n=n, c_s=c_s)
+    if rem:
+        def rem_body(x, xs):
+            mp, C, n = xs
+            x, (Cj, nj) = mlstm_decode(mp, x, cfg, (C, n))
+            return x, (Cj, nj)
+        x, (Cr, nr) = jax.lax.scan(
+            rem_body, x, (params["rem_mlstm"], cache["C_rem"], cache["n_rem"]))
+        new_cache.update(C_rem=Cr, n_rem=nr)
+    x = rms_norm(x, params["final_norm"])
+    new_cache["pos"] = cache["pos"] + 1
+    return mask_vocab((x @ params["lm_head"])[:, 0], cfg.vocab), new_cache

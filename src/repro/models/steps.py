@@ -1,0 +1,141 @@
+"""Step builders: train_step / prefill_step / serve_step per architecture.
+
+These are the functions the launcher lowers for the dry-run and the smoke
+tests execute on CPU.  All are pure: ``(params, state, batch) -> ...``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Family, get_family
+from repro.models.base import ArchConfig, InputShape
+from repro.train.optimizer import (AdamWConfig, AdamWState, AdafactorState,
+                                   adafactor_init, adafactor_update, adamw_init,
+                                   adamw_update)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    fam = get_family(cfg)
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if "frames" in batch:
+            kwargs["frames"] = batch["frames"]
+        if "patches" in batch:
+            kwargs["patches"] = batch["patches"]
+        logits = fam.forward(params, cfg, batch["tokens"], **kwargs)
+        return cross_entropy(logits, batch["labels"])
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+    accum_steps: int = 1,
+    optimizer: str = "adamw",
+    accum_dtype: Any = None,
+) -> Callable:
+    """Returns ``train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)``.  ``accum_steps > 1`` scans over
+    microbatches with gradient accumulation (memory-bound archs).
+    ``optimizer='adafactor'`` uses the factored second moment (the 100B+
+    regime); its gradient accumulator defaults to the param dtype."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn)
+    update = adamw_update if optimizer == "adamw" else adafactor_update
+    if accum_dtype is None:
+        accum_dtype = jnp.float32 if optimizer == "adamw" else None  # None: param dtype
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                l, g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return (acc, loss_acc + l), None
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(
+                    p.shape, accum_dtype if accum_dtype is not None else p.dtype),
+                params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), micro_batch)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+        params, opt_state, metrics = update(opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    """``prefill(params, batch) -> (last_logits, kv_cache_parts)``."""
+    fam = get_family(cfg)
+
+    def prefill(params, batch):
+        kwargs = {}
+        if "frames" in batch:
+            kwargs["frames"] = batch["frames"]
+        if "patches" in batch:
+            kwargs["patches"] = batch["patches"]
+        logits = fam.forward(params, cfg, batch["tokens"], remat=False, **kwargs)
+        return logits[:, -1]
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, ring: bool = False) -> Callable:
+    """``serve_step(params, cache, token) -> (logits, cache)`` — ONE new
+    token against a ``seq_len``-deep cache/state."""
+    fam = get_family(cfg)
+
+    def serve_step(params, cache, token):
+        if cfg.arch_type in ("ssm", "hybrid"):
+            return fam.decode_step(params, cfg, cache, token)
+        return fam.decode_step(params, cfg, cache, token, ring=ring)
+
+    return serve_step
+
+
+def synthetic_batch(cfg: ArchConfig, shape: InputShape,
+                    key: Optional[jax.Array] = None,
+                    batch_override: Optional[int] = None,
+                    seq_override: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Materialized synthetic batch (smoke tests); mirrors input_specs()."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab, jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            k3, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.frontend_tokens:
+        batch["patches"] = jax.random.normal(
+            k3, (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+    return batch

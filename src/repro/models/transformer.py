@@ -1,0 +1,503 @@
+"""Unified transformer stack: dense GQA, MoE, VLM-backbone and enc-dec.
+
+Covers llama3-8b, yi-34b, h2o-danube-3 (SWA), qwen3 (qk-norm),
+granite-moe (32e top-8), grok-1 (8e top-2), internvl2 (stub ViT frontend)
+and whisper-tiny (stub conv frontend, encoder-decoder).
+
+Design choices for the multi-pod dry-run:
+
+* layers are **stacked** and iterated with ``jax.lax.scan`` (one block in
+  the compiled HLO regardless of depth);
+* MoE uses **sort-based capacity dispatch** (argsort by expert id +
+  scatter/gather), not the dense all-experts einsum — compiled FLOPs stay
+  proportional to *activated* parameters, which the roofline's
+  MODEL_FLOPS/HLO_FLOPs ratio checks;
+* decode supports both a full KV cache and a **ring-buffer sliding-window
+  cache** (the ``swa_decode_variant`` used by every dense arch for
+  long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+from repro.models import act_sharding
+from repro.models.act_sharding import constrain
+from repro.nn.layers import (
+    apply_rope,
+    dense_init,
+    embed_init,
+    gqa_attention,
+    init_swiglu,
+    mask_vocab,
+    rms_norm,
+    rope_frequencies,
+    split,
+    swiglu,
+)
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _init_block(key: jax.Array, cfg: ArchConfig, dtype: Any, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = split(key, 8)
+    p: Params = {
+        "norm1": jnp.ones((d,), dtype),
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+        "norm2": jnp.ones((d,), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    if cfg.arch_type == "moe":
+        ks2 = split(ks[4], 4)
+        p["router"] = dense_init(ks2[0], d, cfg.n_experts, dtype)
+        p["moe_gate"] = _expert_init(ks2[1], cfg.n_experts, d, cfg.d_ff, dtype)
+        p["moe_up"] = _expert_init(ks2[2], cfg.n_experts, d, cfg.d_ff, dtype)
+        p["moe_down"] = _expert_init(ks2[3], cfg.n_experts, cfg.d_ff, d, dtype)
+    else:
+        p["mlp"] = init_swiglu(ks[5], d, cfg.d_ff, dtype)
+    if cross:
+        p["cross_norm"] = jnp.ones((d,), dtype)
+        p["cwq"] = dense_init(ks[6], d, cfg.n_heads * hd, dtype)
+        kc = split(ks[7], 3)
+        p["cwk"] = dense_init(kc[0], d, cfg.n_kv_heads * hd, dtype)
+        p["cwv"] = dense_init(kc[1], d, cfg.n_kv_heads * hd, dtype)
+        p["cwo"] = dense_init(kc[2], cfg.n_heads * hd, d, dtype)
+    return p
+
+
+def _expert_init(key, e, din, dout, dtype):
+    keys = jax.random.split(key, e)
+    return jax.vmap(lambda k: dense_init(k, din, dout, dtype))(keys)
+
+
+def init_params(key: jax.Array, cfg: ArchConfig, dtype: Any = jnp.float32) -> Params:
+    ks = split(key, 8)
+    cross = cfg.is_encoder_decoder
+    block_keys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype, cross=cross))(block_keys)
+    p: Params = {
+        "embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[2], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+    if cfg.is_encoder_decoder:
+        enc_cfg = dataclasses.replace(
+            cfg, arch_type="dense", n_layers=cfg.encoder_layers,
+            d_ff=cfg.d_ff or 4 * cfg.d_model, is_encoder_decoder=False,
+        )
+        enc_keys = jax.random.split(ks[3], cfg.encoder_layers)
+        p["enc_blocks"] = jax.vmap(
+            lambda k: _init_block(k, enc_cfg, dtype)
+        )(enc_keys)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+        p["enc_pos"] = embed_init(ks[4], cfg.encoder_seq, cfg.d_model, dtype)
+    if cfg.frontend_tokens:
+        p["projector"] = dense_init(ks[5], cfg.frontend_dim, cfg.d_model, dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# MoE: sort-based capacity dispatch
+# --------------------------------------------------------------------------
+
+def _moe_route(p: Params, x: jax.Array, cfg: ArchConfig, cap: int):
+    """Group-local routing: sort by expert, capacity-crop ranks.
+
+    Runs under vmap over dispatch groups — every sort/scatter stays
+    group-local, so with groups sharded over the data axis no routing op
+    crosses shards (GShard's grouping, adapted to the JAX scatter idiom).
+    Returns (buf [E, C, d], se, st, sp, rank)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    logits = x @ p["router"]                              # [T, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    flat_e = top_e.reshape(-1)                            # [T*k]
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    starts = jnp.searchsorted(se, jnp.arange(e))
+    rank = jnp.arange(t * k) - starts[se]
+    # capacity-dropped tokens get an out-of-bounds rank: mode='drop'
+    # removes them without a dump row, keeping the buffer [E, C, d]
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[se, rank].set(x[st], mode="drop")
+    return buf, se, st, sp, rank
+
+
+def _moe_combine(out: jax.Array, se, st, sp, rank, t: int) -> jax.Array:
+    contrib = out.at[se, rank].get(mode="fill", fill_value=0.0)
+    contrib = contrib * sp.astype(out.dtype)[:, None]
+    return jnp.zeros((t, out.shape[-1]), out.dtype).at[st].add(contrib)
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: [T, d] token-flattened; dispatch in G data-parallel groups.
+
+    Dispatch/combine are vmapped per group; the expert einsums keep the
+    explicit group dim so the launcher's sharding constraints pin
+    [G, E, C, *] buffers to (data, expert->model | ff->model) — without
+    them GSPMD replicates the multi-GB hidden activations."""
+    t, d = x.shape
+    g = act_sharding.moe_groups()
+    if t % g != 0 or t // g < cfg.n_experts:
+        g = 1
+    tg = t // g
+    cap = int(cfg.capacity_factor * tg * cfg.experts_per_token / cfg.n_experts)
+    cap = max(8, min(cap, tg))
+    xg = x.reshape(g, tg, d)
+    bufs, se, st, sp, rank = jax.vmap(
+        lambda xl: _moe_route(p, xl, cfg, cap))(xg)
+    bufs = act_sharding.constrain_moe(bufs, "dispatch")   # [G, E, C, d]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", bufs, p["moe_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", bufs, p["moe_up"])
+    h = act_sharding.constrain_moe(h, "hidden")           # [G, E, C, ff]
+    out = jnp.einsum("gecf,efd->gecd", h, p["moe_down"])
+    out = act_sharding.constrain_moe(out, "out")          # [G, E, C, d]
+    yg = jax.vmap(partial(_moe_combine, t=tg))(out, se, st, sp, rank)
+    return yg.reshape(t, d).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _attn(p, x, cfg: ArchConfig, rope, positions=None, causal=True,
+          window=None, kv_cache=None, write_idx=None, ring=False,
+          cache_positions=None):
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    h = rms_norm(x, p["norm1"])
+    q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope
+    if positions is None:
+        positions = jnp.arange(s)
+    q = apply_rope(q, cos, sin, positions)
+    k = apply_rope(k, cos, sin, positions)
+
+    new_kv = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), write_idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), write_idx, axis=1)
+        new_kv = (ck, cv)
+        neg = jnp.finfo(jnp.float32).min
+        qpos = positions[:, None]                         # [s, 1] absolute
+        mask = jnp.where(cache_positions[None, :] <= qpos, 0.0, neg)
+        if window is not None:
+            mask = mask + jnp.where(
+                cache_positions[None, :] > qpos - window, 0.0, neg)
+        mask = jnp.broadcast_to(mask[None, None], (b, 1, s, ck.shape[1]))
+        out = gqa_attention(q, ck, cv, causal=False, mask=mask)
+    else:
+        out = gqa_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return x + out @ p["wo"], new_kv
+
+
+def _cross_attn(p, x, enc_out, cfg: ArchConfig):
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    h = rms_norm(x, p["cross_norm"])
+    q = (h @ p["cwq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (enc_out @ p["cwk"]).reshape(b, enc_out.shape[1], cfg.n_kv_heads, hd)
+    v = (enc_out @ p["cwv"]).reshape(b, enc_out.shape[1], cfg.n_kv_heads, hd)
+    out = gqa_attention(q, k, v, causal=False)
+    return x + out.reshape(b, s, cfg.n_heads * hd) @ p["cwo"]
+
+
+def _mlp(p, x, cfg: ArchConfig):
+    h = rms_norm(x, p["norm2"])
+    if cfg.arch_type == "moe":
+        b, s, d = h.shape
+        y = moe_apply(p, h.reshape(b * s, d), cfg).reshape(b, s, d)
+    else:
+        y = swiglu(p["mlp"], h)
+    return x + y
+
+
+def block_apply(p, x, cfg: ArchConfig, rope, enc_out=None, **attn_kw):
+    x, new_kv = _attn(p, x, cfg, rope, **attn_kw)
+    if enc_out is not None:
+        x = _cross_attn(p, x, enc_out, cfg)
+    x = _mlp(p, x, cfg)
+    return x, new_kv
+
+
+# --------------------------------------------------------------------------
+# Encoder (enc-dec archs)
+# --------------------------------------------------------------------------
+
+def encode(params: Params, cfg: ArchConfig, frames: jax.Array,
+            rope) -> jax.Array:
+    """frames: [B, enc_seq, d_model] stub-frontend embeddings."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]]
+    enc_cfg = dataclasses.replace(cfg, arch_type="dense",
+                                  d_ff=cfg.d_ff or 4 * cfg.d_model,
+                                  is_encoder_decoder=False)
+
+    def body(x, p):
+        x, _ = _attn(p, x, enc_cfg, rope, causal=False)
+        x = _mlp(p, x, enc_cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"])
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill logits)
+# --------------------------------------------------------------------------
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,                        # [B, S]
+    frames: Optional[jax.Array] = None,       # enc-dec: [B, enc_seq, d]
+    patches: Optional[jax.Array] = None,      # vlm: [B, P, frontend_dim]
+    remat: bool = True,
+    last_only: bool = False,
+) -> jax.Array:
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(params["lm_head"].dtype)
+    if patches is not None:
+        proj = patches @ params["projector"]
+        x = jnp.concatenate([proj.astype(x.dtype), x], axis=1)
+    seq = x.shape[1]
+    rope = rope_frequencies(cfg.head_dim, seq, cfg.rope_theta)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_rope = rope_frequencies(cfg.head_dim, cfg.encoder_seq, cfg.rope_theta)
+        enc_out = encode(params, cfg, frames, enc_rope)
+
+    def body(x, p):
+        y, _ = block_apply(p, x, cfg, rope, enc_out=enc_out,
+                           causal=True, window=cfg.sliding_window)
+        return constrain(y), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, constrain(x), params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    if patches is not None:
+        x = x[:, -s:]                          # loss only over text positions
+    if last_only:
+        x = x[:, -1:]
+    return mask_vocab(x @ params["lm_head"], cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# Decode (serve_step)
+# --------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                      dtype: Any = jnp.bfloat16, ring: bool = False,
+                      window: int = 8192) -> Dict[str, Any]:
+    """KV cache for decode.  ``ring=True`` allocates a sliding-window
+    ring buffer (the long_500k sub-quadratic variant): K is stored UNROPED
+    and roped at read time with window-relative positions."""
+    size = min(window, seq_len) if ring else seq_len
+    shape = (cfg.n_layers, batch, size, cfg.n_kv_heads, cfg.head_dim)
+    cache: Dict[str, Any] = {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        cache["enc_out"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), dtype)
+    return cache
+
+
+def _flash_decode_shardmap(shards, q, k, v, ck, cv, pos, window):
+    """Flash-decode over a sequence-sharded KV cache via shard_map.
+
+    Each model-axis shard updates its local cache slice (iff ``pos`` falls
+    inside it) and computes partial (max, sum, acc) online-softmax terms
+    over its slots; a pmax/psum pair assembles the exact global softmax.
+    Per-layer collective traffic drops from gathering the whole cache
+    (GBs) to one [B,1,H,D] psum + two scalars — see EXPERIMENTS.md §Perf.
+    """
+    mesh, axis, dp = shards
+    from jax.sharding import PartitionSpec as P
+
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    neg = jnp.finfo(jnp.float32).min
+
+    def local(q, k_new, v_new, ck, cv, pos):
+        bl, sl_q = q.shape[0], q.shape[1]      # local batch shard
+        i = jax.lax.axis_index(axis)
+        sl = ck.shape[1]
+        start = i * sl
+        loc = jnp.clip(pos - start, 0, sl - 1)
+        in_range = (pos >= start) & (pos < start + sl)
+        ck_u = jax.lax.dynamic_update_slice_in_dim(
+            ck, k_new.astype(ck.dtype), loc, axis=1)
+        cv_u = jax.lax.dynamic_update_slice_in_dim(
+            cv, v_new.astype(cv.dtype), loc, axis=1)
+        ck = jnp.where(in_range, ck_u, ck)
+        cv = jnp.where(in_range, cv_u, cv)
+        qf = (q.astype(jnp.float32) * scale).reshape(bl, sl_q, hkv, g, hd)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qf, ck.astype(jnp.float32))
+        slots = start + jnp.arange(sl)
+        mask = slots <= pos
+        if window is not None:
+            mask = mask & (slots > pos - window)
+        sc = jnp.where(mask[None, None, None, None, :], sc, neg)
+        m_loc = jnp.max(sc, axis=-1)                       # [b,hkv,g,s]
+        m_glob = jax.lax.pmax(m_loc, axis)
+        p_ = jnp.where(mask[None, None, None, None, :],
+                       jnp.exp(sc - m_glob[..., None]), 0.0)
+        l_loc = jnp.sum(p_, axis=-1)
+        acc_loc = jnp.einsum("bhgqk,bkhd->bqhgd", p_, cv.astype(jnp.float32))
+        l = jax.lax.psum(l_loc, axis)
+        acc = jax.lax.psum(acc_loc, axis)
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l.transpose(0, 3, 1, 2)[..., None]).reshape(bl, sl_q, hq, hd)
+        return out.astype(q.dtype), ck, cv
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(dp), P(dp), P(dp), P(dp, axis), P(dp, axis), P()),
+        out_specs=(P(dp), P(dp, axis), P(dp, axis)),
+        check_vma=False,
+    )
+    return fn(q, k, v, ck, cv, pos)
+
+
+def _decode_attn_full(p, x, cfg, rope, pos, ck, cv, window):
+    """Standard decode attention: absolute-roped keys, full cache."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    h = rms_norm(x, p["norm1"])
+    q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope
+    qpos = jnp.full((s,), pos, jnp.int32)
+    q = apply_rope(q, cos, sin, qpos)
+    k = apply_rope(k, cos, sin, qpos)
+    shards = act_sharding.decode_shards()
+    if shards is not None:
+        out, ck, cv = _flash_decode_shardmap(shards, q, k, v, ck, cv, pos, window)
+        return x + out.reshape(b, s, cfg.n_heads * hd) @ p["wo"], (ck, cv)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
+    size = ck.shape[1]
+    slots = jnp.arange(size)
+    neg = jnp.finfo(jnp.float32).min
+    mask = jnp.where(slots <= pos, 0.0, neg)
+    if window is not None:
+        mask = mask + jnp.where(slots > pos - window, 0.0, neg)
+    mask = jnp.broadcast_to(mask[None, None, None, :], (b, 1, s, size))
+    out = gqa_attention(q, ck, cv, causal=False, mask=mask)
+    return x + out.reshape(b, s, cfg.n_heads * hd) @ p["wo"], (ck, cv)
+
+
+def _decode_attn_ring(p, x, cfg, rope, pos, ck, cv):
+    """Ring-buffer sliding-window decode attention (long_500k variant).
+
+    The cache stores UNROPED keys; every read ropes the whole window with
+    positions relative to ``base = max(pos - size + 1, 0)`` — exact for
+    RoPE (it only depends on position differences) and O(window) work.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    size = ck.shape[1]
+    h = rms_norm(x, p["norm1"])
+    q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    write_idx = jnp.mod(pos, size)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), write_idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), write_idx, axis=1)
+    slots = jnp.arange(size)
+    # absolute position held by each slot
+    off = jnp.mod(write_idx - slots, size)
+    abs_pos = pos - off
+    base = jnp.maximum(pos - size + 1, 0)
+    rel_k = jnp.clip(abs_pos - base, 0, size - 1)
+    rel_q = jnp.clip(pos - base, 0, size - 1)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin, jnp.full((s,), rel_q, jnp.int32))
+    k_all = apply_rope(ck, cos, sin, rel_k)
+    neg = jnp.finfo(jnp.float32).min
+    mask = jnp.where(abs_pos >= 0, 0.0, neg)
+    mask = jnp.broadcast_to(mask[None, None, None, :], (b, 1, s, size))
+    out = gqa_attention(q, k_all, cv, causal=False, mask=mask)
+    return x + out.reshape(b, s, cfg.n_heads * hd) @ p["wo"], (ck, cv)
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    cache: Dict[str, Any],
+    token: jax.Array,                 # [B] int32 — ONE new token per row
+    ring: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    pos = cache["pos"]
+    size = cache["k"].shape[2]
+    x = params["embed"][token][:, None, :].astype(params["lm_head"].dtype)
+    rope = rope_frequencies(cfg.head_dim, size, cfg.rope_theta)
+    enc_out = cache.get("enc_out")
+
+    def body(carry, xs):
+        # caches ride the CARRY (indexed by layer) instead of scan ys so
+        # XLA can alias the donated buffers in place of double-buffering
+        x, ck_all, cv_all, li = carry
+        p = xs
+        ck = jax.lax.dynamic_index_in_dim(ck_all, li, axis=0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, li, axis=0, keepdims=False)
+        if ring:
+            y, (ck, cv) = _decode_attn_ring(p, x, cfg, rope, pos, ck, cv)
+        else:
+            y, (ck, cv) = _decode_attn_full(p, x, cfg, rope, pos, ck, cv,
+                                            cfg.sliding_window)
+        if enc_out is not None:
+            y = _cross_attn(p, y, enc_out, cfg)
+        y = _mlp(p, y, cfg)
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, li, axis=0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, li, axis=0)
+        return (y, ck_all, cv_all, li + 1), None
+
+    (x, new_k, new_v, _), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"], jnp.zeros((), jnp.int32)),
+        params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    logits = mask_vocab((x @ params["lm_head"])[:, 0], cfg.vocab)
+    new_cache = dict(cache)
+    new_cache.update(k=new_k, v=new_v, pos=pos + 1)
+    return logits, new_cache

@@ -1,0 +1,20 @@
+"""Shared pure-JAX NN primitives."""
+
+from repro.nn.layers import (
+    attention_block,
+    apply_rope,
+    dense_init,
+    embed_init,
+    gelu_mlp,
+    gqa_attention,
+    init_attention,
+    init_mlp,
+    init_swiglu,
+    layer_norm,
+    modulate,
+    rms_norm,
+    rope_frequencies,
+    split,
+    swiglu,
+    timestep_embedding,
+)

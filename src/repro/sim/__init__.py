@@ -1,0 +1,12 @@
+"""Cluster-scale simulation plane: traces, metrics, monolithic baselines."""
+
+from repro.sim.metrics import (
+    RequestRecord,
+    goodput,
+    latency_cdf,
+    mean_latency,
+    percentile_latency,
+    slo_attainment,
+)
+from repro.sim.monolithic import MonolithicSystem, WorkflowSpec
+from repro.sim.trace import TraceRequest, diurnal_trace, gamma_interarrivals, generate_trace

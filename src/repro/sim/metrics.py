@@ -1,0 +1,65 @@
+"""Serving metrics — SLO attainment and friends (§7.1 Metrics)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    arrival: float
+    workflow: str
+    deadline: Optional[float]
+    completion: Optional[float] = None   # None => rejected or unfinished
+    rejected: bool = False
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.completion is None:
+            return None
+        return self.completion - self.arrival
+
+    @property
+    def attained(self) -> bool:
+        if self.rejected or self.completion is None or self.deadline is None:
+            return False
+        return self.completion <= self.deadline
+
+
+def slo_attainment(records: Sequence[RequestRecord]) -> float:
+    if not records:
+        return 0.0
+    return sum(1 for r in records if r.attained) / len(records)
+
+
+def mean_latency(records: Sequence[RequestRecord]) -> float:
+    lats = [r.latency for r in records if r.latency is not None]
+    return sum(lats) / len(lats) if lats else float("nan")
+
+
+def percentile_latency(records: Sequence[RequestRecord], q: float) -> float:
+    lats = sorted(r.latency for r in records if r.latency is not None)
+    if not lats:
+        return float("nan")
+    idx = min(len(lats) - 1, int(q * len(lats)))
+    return lats[idx]
+
+
+def goodput(records: Sequence[RequestRecord], duration: float) -> float:
+    """Attained requests per second."""
+    if duration <= 0:
+        return 0.0
+    return sum(1 for r in records if r.attained) / duration
+
+
+def latency_cdf(records: Sequence[RequestRecord], points: int = 50) -> List[tuple]:
+    lats = sorted(r.latency for r in records if r.latency is not None)
+    if not lats:
+        return []
+    out = []
+    for i in range(points + 1):
+        q = i / points
+        idx = min(len(lats) - 1, int(q * len(lats)))
+        out.append((lats[idx], q))
+    return out

@@ -1,0 +1,20 @@
+"""Training substrate: optimizer, checkpointing, loop."""
+
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.optimizer import (
+    AdafactorState,
+    AdamWConfig,
+    AdamWState,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+)
+
+
+def __getattr__(name):
+    # lazy: loop imports models.steps, which imports this package
+    if name in ("TrainConfig", "train"):
+        from repro.train import loop
+        return getattr(loop, name)
+    raise AttributeError(name)

@@ -1,0 +1,85 @@
+"""Minimal dependency-free checkpointing (numpy .npz + pytree manifest).
+
+Saves/restores arbitrary JAX pytrees (params + optimizer state) with
+structure recorded as flattened key paths.  Atomic via tmp-rename; keeps
+the last ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    tmp = tempfile.mkdtemp(dir=directory)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "keys": sorted(flat)}, f)
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(directory, keep)
+    return final
+
+
+def _prune(directory: str, keep: int) -> None:
+    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].split("_")[1])
+
+
+def restore_checkpoint(directory: str, template: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (shape-checked)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    flat_t = _flatten(template)
+    restored_flat = {}
+    for key, ref in flat_t.items():
+        got = arrays[key]
+        if got.shape != ref.shape:
+            raise ValueError(f"{key}: checkpoint {got.shape} != template {ref.shape}")
+        restored_flat[key] = got.astype(ref.dtype)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys_in_order = [k for k, _ in sorted(flat_t.items())]
+    # rebuild in template leaf order
+    path_leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+    ordered = []
+    for p, leaf in path_leaves:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", getattr(q, "name", q))))
+                       for q in p)
+        ordered.append(restored_flat[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered), step

@@ -1,0 +1,68 @@
+"""Training loop driver: data pipeline -> jit'd train step -> checkpoints.
+
+CPU-runnable at reduced scale (the examples train a ~100M-param model a few
+hundred steps); the same loop lowers onto the production mesh through
+:mod:`repro.launch.train`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.api import get_family
+from repro.models.base import ArchConfig
+from repro.models.steps import make_train_step
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.optimizer import AdamWConfig, adafactor_init, adamw_init
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    optimizer: str = "adamw"
+    accum_steps: int = 1
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def train(cfg: ArchConfig, data_cfg: DataConfig, tcfg: TrainConfig,
+          log: Callable[[str], None] = print) -> Dict[str, Any]:
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(data_cfg.seed), cfg)
+    init_opt = adamw_init if tcfg.optimizer == "adamw" else adafactor_init
+    opt_state = init_opt(params)
+    start = 0
+    if tcfg.checkpoint_dir and latest_step(tcfg.checkpoint_dir) is not None:
+        (params, opt_state), start = restore_checkpoint(
+            tcfg.checkpoint_dir, (params, opt_state))
+        log(f"restored checkpoint at step {start}")
+
+    step_fn = jax.jit(make_train_step(
+        cfg, opt_cfg=tcfg.opt, accum_steps=tcfg.accum_steps,
+        optimizer=tcfg.optimizer))
+    pipe = iter(SyntheticLM(cfg, data_cfg))
+    losses: List[float] = []
+    t0 = time.perf_counter()
+    tokens_per_step = data_cfg.batch_size * data_cfg.seq_len
+    for step in range(start, tcfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if (step + 1) % tcfg.log_every == 0:
+            dt = time.perf_counter() - t0
+            tps = tokens_per_step * tcfg.log_every / dt
+            log(f"step {step+1:5d}  loss {loss:7.4f}  "
+                f"lr {float(metrics['lr']):.2e}  {tps:,.0f} tok/s")
+            t0 = time.perf_counter()
+        if tcfg.checkpoint_dir and (step + 1) % tcfg.checkpoint_every == 0:
+            save_checkpoint(tcfg.checkpoint_dir, step + 1, (params, opt_state))
+    return {"params": params, "opt_state": opt_state, "losses": losses}

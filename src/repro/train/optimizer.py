@@ -1,0 +1,155 @@
+"""AdamW in pure JAX (no optax dependency).
+
+Moments are kept in fp32 regardless of parameter dtype; the update is
+computed in fp32 and cast back — the standard mixed-precision recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cosine = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cosine)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+class AdafactorState(NamedTuple):
+    """Factored second-moment state (Shazeer & Stern 2018): for matrices,
+    row/column statistics replace the full moment — O(n+m) instead of
+    O(nm) memory.  No first moment (beta1=0).  This is what makes the
+    314B-parameter train_4k fit v5e HBM (see EXPERIMENTS.md §Perf)."""
+
+    step: jax.Array
+    vr: Any          # row stats:  mean of g^2 over last dim
+    vc: Any          # col stats:  mean of g^2 over dim -2 (matrices only)
+
+
+def adafactor_init(params: Any) -> AdafactorState:
+    def row(p):
+        return jnp.zeros(p.shape[:-1] if p.ndim >= 2 else p.shape, jnp.float32)
+
+    def col(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(row, params),
+        vc=jax.tree.map(col, params),
+    )
+
+
+def adafactor_update(
+    cfg: AdamWConfig, params: Any, grads: Any, state: AdafactorState
+) -> Tuple[Any, AdafactorState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+    beta2 = 1.0 - jnp.power(step.astype(jnp.float32), -0.8)
+    eps = 1e-30
+
+    def upd(p, g, r, c):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            r = beta2 * r + (1 - beta2) * jnp.mean(g2, axis=-1)
+            c = beta2 * c + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), eps)
+            v = (r[..., None] * c[..., None, :]) / denom[..., None]
+        else:
+            r = beta2 * r + (1 - beta2) * g2
+            v = r
+            c = c
+        u = g / jnp.sqrt(v + 1e-12)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), r, c
+
+    def upd_leaf(p, g, r, c):
+        # NOTE(perf log): chunking billion-element leaf updates via
+        # lax.map was tried and REFUTED — it added ~0.7 GiB (stacked map
+        # outputs need a fresh full-leaf buffer) — see EXPERIMENTS.md.
+        return upd(p, g, r, c)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_r = treedef.flatten_up_to(state.vr)
+    flat_c = treedef.flatten_up_to(state.vc)
+    out = [upd_leaf(p, g, r, c)
+           for p, g, r, c in zip(flat_p, flat_g, flat_r, flat_c)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_r = treedef.unflatten([o[1] for o in out])
+    new_c = treedef.unflatten([o[2] for o in out])
+    return new_p, AdafactorState(step, new_r, new_c), {"lr": lr}
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Any, grads: Any, state: AdamWState
+) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, state.step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** step)
+        vhat = v / (1 - cfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                     # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), metrics

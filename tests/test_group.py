@@ -1,0 +1,38 @@
+"""Multi-coordinator sharding (§8): clustering + routed serving."""
+
+from repro.core import CoordinatorGroup
+from repro.diffusion import table2_setting
+from repro.sim import generate_trace
+
+
+def test_clusters_preserve_sharing():
+    """S5 (SD3 + SD3.5 families) must split into exactly two clusters —
+    families share nothing across, everything within."""
+    wfs = table2_setting("s5")
+    group = CoordinatorGroup(wfs, n_executors=8, max_coordinators=4)
+    assert group.n_coordinators == 2
+    # all three sd3 variants route to the same coordinator
+    sd3 = {group.route[n] for n in wfs if n.startswith("sd3:")}
+    sd35 = {group.route[n] for n in wfs if n.startswith("sd3.5-large:")}
+    assert len(sd3) == 1 and len(sd35) == 1 and sd3 != sd35
+
+
+def test_group_serves_trace():
+    wfs = table2_setting("s5")
+    group = CoordinatorGroup(wfs, n_executors=8)
+    trace = generate_trace(list(wfs), rate=0.5, duration=120, cv=1.5, seed=2)
+    solo = 30.0
+    for t in trace:
+        group.submit(t.workflow, inputs=t.inputs, arrival=t.arrival,
+                     slo_seconds=solo)
+    group.run()
+    done = sum(len(s.coordinator.finished) for s in group.systems)
+    rej = sum(len(s.coordinator.rejected) for s in group.systems)
+    assert done + rej == len(trace)
+    assert group.slo_attainment() > 0.3
+
+
+def test_single_cluster_single_coordinator():
+    wfs = table2_setting("s1")        # one family -> one sharing cluster
+    group = CoordinatorGroup(wfs, n_executors=4)
+    assert group.n_coordinators == 1

@@ -1,0 +1,63 @@
+"""Monolithic baselines: semantics + expected ordering vs micro-serving."""
+
+from repro.core import ProfileStore, ServingSystem
+from repro.core.profiles import GPU_H800
+from repro.sim import MonolithicSystem, WorkflowSpec, generate_trace
+
+
+def _specs(toy_workflow, toy_basic_workflow):
+    profiles = ProfileStore(GPU_H800)
+    reg = ServingSystem(n_executors=1)
+    reg.register(toy_workflow)
+    reg.register(toy_basic_workflow)
+    return profiles, {
+        n: WorkflowSpec.from_graph(reg.registry.instantiate(n, steps=4), profiles)
+        for n in ("toy_cn", "toy_basic")
+    }
+
+
+def test_workflow_spec_footprint(toy_workflow, toy_basic_workflow):
+    profiles, specs = _specs(toy_workflow, toy_basic_workflow)
+    # cn workflow footprint = enc + backbone + cn + vae (+ trivial zero)
+    assert specs["toy_cn"].footprint_bytes > specs["toy_basic"].footprint_bytes
+    assert specs["toy_cn"].serial_seconds_b1 > specs["toy_basic"].serial_seconds_b1
+
+
+def test_static_binding_serves_only_dedicated(toy_workflow, toy_basic_workflow):
+    profiles, specs = _specs(toy_workflow, toy_basic_workflow)
+    m = MonolithicSystem(2, profiles, specs, mode="diffusers")
+    assert {g.dedicated_to for g in m.gpus} == {"toy_cn", "toy_basic"}
+    for t in generate_trace(["toy_cn", "toy_basic"], 0.5, 60, seed=3):
+        m.submit(t.arrival, t.workflow, 10.0)
+    m.run()
+    assert all(r.completion or r.rejected for r in m.records)
+
+
+def test_swap_counts_loads(toy_workflow, toy_basic_workflow):
+    profiles, specs = _specs(toy_workflow, toy_basic_workflow)
+    m = MonolithicSystem(1, profiles, specs, mode="diffusers-c", admission=False)
+    for i, w in enumerate(["toy_cn", "toy_basic"] * 4):
+        m.submit(i * 20.0, w, None)
+    m.run()
+    assert m.total_loads() >= 7      # alternation forces whole-workflow swaps
+
+
+def test_lego_beats_monolithic_under_pressure(toy_workflow, toy_basic_workflow):
+    from repro.core import ServingSystem as SS
+    profiles, specs = _specs(toy_workflow, toy_basic_workflow)
+    trace = generate_trace(["toy_cn", "toy_basic"], rate=2.5, duration=90,
+                           cv=2.0, seed=4)
+    lego = SS(n_executors=4, admission_enabled=True)
+    lego.register(toy_workflow)
+    lego.register(toy_basic_workflow)
+    solo = {n: lego.solo_latency(n, steps=4) for n in specs}
+    for t in trace:
+        lego.submit(t.workflow, inputs=t.inputs, arrival=t.arrival,
+                    slo_seconds=2 * solo[t.workflow], steps=4)
+    lego.run()
+    mono = MonolithicSystem(4, profiles, specs, mode="diffusers-s")
+    solo_m = {n: specs[n].serial_seconds_b1 for n in specs}
+    for t in trace:
+        mono.submit(t.arrival, t.workflow, 2 * solo_m[t.workflow])
+    mono.run()
+    assert lego.slo_attainment() >= mono.slo_attainment()

@@ -1,0 +1,55 @@
+"""Compiler optimization passes: caching rewrite, async LoRA, DCE."""
+
+import pytest
+
+from repro.core import (
+    ApproximateCachingPass,
+    GraphCompiler,
+    InlineTrivialPass,
+    JitCompilePass,
+    default_passes,
+)
+from repro.core.passes import AsyncLoRAPass, LoRAFetch
+from repro.diffusion import ApproxCache, LoRAAdapter, make_basic_workflow, make_lora_workflow
+
+
+def test_inline_trivial_marks_denoise(toy_workflow):
+    graph = GraphCompiler(default_passes()).compile(
+        toy_workflow.instantiate(steps=2))
+    for n in graph.nodes_of_model("denoise"):
+        assert n.attrs.get("inline")
+    for n in graph.nodes_of_model("backbone"):
+        assert not n.attrs.get("inline")
+        assert n.attrs.get("jit")
+
+
+def test_approx_cache_skips_iterations():
+    cache = ApproxCache(similarity_threshold=0.0)
+    cache.insert("any", 10, None)
+    passes = [ApproximateCachingPass(cache, "backbone:sd3", skip_fraction=0.4),
+              InlineTrivialPass(), JitCompilePass()]
+    wf = make_basic_workflow("sd3")
+    graph = GraphCompiler(passes).compile(wf.instantiate(steps=10))
+    assert len(graph.nodes_of_model("backbone:sd3")) == 6   # 10 - 4
+    assert len(graph.nodes_of_model("approx_cache_lookup")) == 1
+    # random-latent init was dead-code eliminated
+    assert len(graph.nodes_of_model("latents_generator")) == 0
+
+
+def test_approx_cache_noop_without_hit_config():
+    passes = [ApproximateCachingPass(None, "backbone:sd3", skip_fraction=0.4),
+              InlineTrivialPass(), JitCompilePass()]
+    wf = make_basic_workflow("sd3")
+    graph = GraphCompiler(passes).compile(wf.instantiate(steps=10))
+    assert len(graph.nodes_of_model("backbone:sd3")) == 10
+
+
+def test_async_lora_inserts_fetch_and_checks():
+    wf = make_lora_workflow("sd3", "test-style")
+    graph = GraphCompiler(default_passes()).compile(wf.instantiate(steps=4))
+    fetches = [n for n in graph.nodes if isinstance(n.op, LoRAFetch)]
+    assert len(fetches) == 1
+    assert fetches[0].attrs.get("io_only")
+    for n in graph.nodes_of_model("backbone:sd3"):
+        assert n.attrs.get("lora_check") == [fetches[0].id]
+        assert n.attrs.get("patch_ids") == [fetches[0].op.patch.model_id]

@@ -1,0 +1,76 @@
+"""Algorithm 1: batching, sharing, adaptive parallelism, scoring."""
+
+from repro.core import ServingSystem, Scheduler
+
+
+def _run(toy_workflow, n_exec=4, n_req=12, rate=0.2, **sched_kw):
+    sys_ = ServingSystem(n_executors=n_exec)
+    if sched_kw:
+        sys_.coordinator.scheduler = Scheduler(sys_.profiles, **sched_kw)
+    sys_.register(toy_workflow)
+    for i in range(n_req):
+        sys_.submit("toy_cn", inputs={"seed": i, "prompt": "p"},
+                    arrival=i * rate, steps=4)
+    sys_.run()
+    return sys_
+
+
+def test_batches_group_same_model_only(toy_workflow):
+    sys_ = _run(toy_workflow)
+    for d in sys_.coordinator.dispatch_log:
+        assert len({rn.model_id for rn in d.nodes}) == 1
+        profile = sys_.profiles.get(d.model_id)
+        assert d.batch_size <= profile.max_batch
+
+
+def test_adaptive_parallelism_bounded(toy_workflow):
+    sys_ = _run(toy_workflow)
+    ks = {d.model_id: set() for d in sys_.coordinator.dispatch_log}
+    for d in sys_.coordinator.dispatch_log:
+        ks[d.model_id].add(d.parallelism)
+        assert d.parallelism <= sys_.profiles.get(d.model_id).max_parallelism
+    assert max(ks["backbone"]) == 2      # k_max=2 used when executors idle
+    assert ks["cn"] == {1}
+
+
+def test_fixed_parallelism_one(toy_workflow):
+    sys_ = _run(toy_workflow, fixed_parallelism=1)
+    assert all(d.parallelism == 1 for d in sys_.coordinator.dispatch_log)
+
+
+def test_warm_scoring_prefers_loaded(toy_workflow):
+    sys_ = _run(toy_workflow, n_req=8)
+    # after warmup, dispatches to warm executors dominate: L_load == 0
+    warm = [d for d in sys_.coordinator.dispatch_log[6:] if d.l_load == 0]
+    assert len(warm) > len(sys_.coordinator.dispatch_log[6:]) * 0.8
+
+
+def test_cross_workflow_sharing(toy_workflow, toy_basic_workflow):
+    sys_ = ServingSystem(n_executors=2)
+    sys_.register(toy_workflow)
+    sys_.register(toy_basic_workflow)
+    for i in range(10):
+        sys_.submit("toy_cn" if i % 2 else "toy_basic",
+                    inputs={"seed": i, "prompt": "p"}, arrival=i * 0.05,
+                    steps=3)
+    sys_.run()
+    mixed = 0
+    for d in sys_.coordinator.dispatch_log:
+        wfs = {rn.request.workflow_name for rn in d.nodes}
+        if len(wfs) > 1:
+            mixed += 1
+    assert mixed > 0, "same-model nodes from different workflows must batch"
+
+
+def test_sharing_disabled_never_mixes(toy_workflow, toy_basic_workflow):
+    sys_ = ServingSystem(n_executors=2)
+    sys_.coordinator.scheduler = Scheduler(sys_.profiles, enable_sharing=False)
+    sys_.register(toy_workflow)
+    sys_.register(toy_basic_workflow)
+    for i in range(10):
+        sys_.submit("toy_cn" if i % 2 else "toy_basic",
+                    inputs={"seed": i, "prompt": "p"}, arrival=i * 0.05,
+                    steps=3)
+    sys_.run()
+    for d in sys_.coordinator.dispatch_log:
+        assert len({rn.request.workflow_name for rn in d.nodes}) == 1

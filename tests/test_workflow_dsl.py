@@ -1,0 +1,99 @@
+"""DSL + tracing: typed ports, composition, static inputs, templates."""
+
+import pytest
+
+from repro.core import (
+    CompileError,
+    GraphCompiler,
+    Model,
+    ModelCost,
+    TensorType,
+    Workflow,
+    WorkflowTypeError,
+    compose,
+    default_passes,
+)
+
+
+def test_trace_records_nodes(toy_workflow):
+    wf = toy_workflow.instantiate(steps=4)
+    # latgen + enc + 4*(cn + backbone + denoise) + vae = 15
+    assert len(wf.nodes) == 2 + 4 * 3 + 1
+    assert set(wf.inputs) == {"seed", "prompt"}
+    assert "img" in wf.outputs
+
+
+def test_static_input_controls_loop(toy_workflow):
+    assert len(toy_workflow.instantiate(steps=2).nodes) < \
+        len(toy_workflow.instantiate(steps=8).nodes)
+
+
+def test_template_caches_per_static_key(toy_workflow):
+    a = toy_workflow.instantiate(steps=3)
+    b = toy_workflow.instantiate(steps=3)
+    c = toy_workflow.instantiate(steps=5)
+    assert a is b and a is not c
+
+
+def test_call_outside_workflow_raises(toy_models):
+    with pytest.raises(RuntimeError):
+        toy_models["enc"]("prompt text")
+
+
+def test_unknown_input_rejected(toy_models):
+    with Workflow("bad") as wf:
+        p = wf.add_input("prompt", str)
+        with pytest.raises(WorkflowTypeError):
+            toy_models["enc"](nonsense=p)
+        wf.add_output(toy_models["enc"](p), name="e")
+
+
+def test_missing_required_input_rejected(toy_models):
+    with Workflow("bad2") as wf:
+        with pytest.raises(WorkflowTypeError):
+            toy_models["vae"]()
+        p = wf.add_input("prompt", str)
+        wf.add_output(toy_models["enc"](p), name="e")
+
+
+def test_type_mismatch_rejected(toy_models):
+    """Compile-time catching of tensor-vs-scalar misconnections (§4.1)."""
+    with Workflow("bad3") as wf:
+        p = wf.add_input("prompt", str)
+        emb = toy_models["enc"](p)
+        with pytest.raises(WorkflowTypeError):
+            toy_models["latgen"](emb)        # int port fed a tensor ref
+        wf.add_output(emb, name="e")
+
+
+def test_literal_type_checked(toy_models):
+    with Workflow("bad4") as wf:
+        with pytest.raises(WorkflowTypeError):
+            toy_models["latgen"]("not-an-int")
+        p = wf.add_input("prompt", str)
+        wf.add_output(toy_models["enc"](p), name="e")
+
+
+def test_compiler_topo_and_depth(toy_workflow):
+    graph = GraphCompiler(default_passes()).compile(
+        toy_workflow.instantiate(steps=3))
+    seen = set()
+    for n in graph.nodes:
+        for ref in n.all_input_refs():
+            if ref.producer is not None:
+                assert ref.producer in seen
+        seen.add(n.id)
+    # ControlNet is shallower than the backbone that consumes it
+    cns = graph.nodes_of_model("cn")
+    bbs = graph.nodes_of_model("backbone")
+    for c, b in zip(cns, bbs):
+        assert graph.depth[c.id] < graph.depth[b.id]
+
+
+def test_no_outputs_rejected(toy_models):
+    with Workflow("noout") as wf:
+        p = wf.add_input("prompt", str)
+        toy_models["enc"](p)
+    import pytest
+    with pytest.raises(CompileError):
+        GraphCompiler().compile(wf)
