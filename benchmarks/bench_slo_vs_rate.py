@@ -1,5 +1,8 @@
 """Fig 9 (a)-(f): SLO attainment vs request rate, settings S1-S6,
-LegoDiffusion vs Diffusers / Diffusers-C / Diffusers-S."""
+LegoDiffusion vs Diffusers / Diffusers-C / Diffusers-S.  The ``auto``
+column is LegoDiffusion with per-model autoscaling holding half the
+devices in cold reserve (same total device count): near-fixed attainment
+at a lower time-weighted mean fleet size (``fleet``)."""
 
 from benchmarks.common import attainment_at, emit, max_rate_at_target
 from repro.diffusion import table2_setting
@@ -13,9 +16,12 @@ def run(settings=("s1", "s2", "s3", "s4", "s5", "s6"),
         wfs = table2_setting(s)
         n = GPUS[s]
         for rate in rates:
-            a = attainment_at(wfs, rate, n, cv=2.0, slo=2.0)
+            a = attainment_at(wfs, rate, n, cv=2.0, slo=2.0,
+                              with_autoscaled=True)
             emit(f"fig9_rate[{s},r={rate}]", rate * 1e6,
-                 f"lego={a['lego']:.2f};S={a['diffusers-s']:.2f};"
+                 f"lego={a['lego']:.2f};auto={a['lego-auto']:.2f};"
+                 f"fleet={a['lego-auto-fleet']:.1f};"
+                 f"S={a['diffusers-s']:.2f};"
                  f"C={a['diffusers-c']:.2f};D={a['diffusers']:.2f}")
         lego_max = max_rate_at_target(wfs, n, 2.0, 2.0, system="lego")
         s_max = max_rate_at_target(wfs, n, 2.0, 2.0, system="diffusers-s")

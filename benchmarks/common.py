@@ -21,11 +21,20 @@ from repro.core import (
 )
 from repro.core.profiles import GPU_H800
 from repro.diffusion import table2_setting
-from repro.sim import MonolithicSystem, WorkflowSpec, generate_trace
+from repro.sim import MonolithicSystem, WorkflowSpec, generate_trace, mean_fleet_size
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def serving_horizon(coordinator) -> float:
+    """End of the serving period for time-weighted fleet metrics: the last
+    request completion.  Using ``coordinator.now`` would include the
+    autoscaler's post-trace linger ticks, when the fleet idles at its
+    minimum, and flatter the mean fleet size."""
+    return max((r.completion for r in coordinator.finished
+                if r.completion is not None), default=coordinator.now)
 
 
 def build_lego(
@@ -34,9 +43,12 @@ def build_lego(
     admission: bool = True,
     scheduler: Optional[Scheduler] = None,
     scheduler_kwargs: Optional[Dict[str, Any]] = None,
+    autoscaler: Any = None,
+    reserve_executors: int = 0,
 ) -> ServingSystem:
     sys_ = ServingSystem(
-        n_executors=n_executors, admission_enabled=admission, scheduler=scheduler
+        n_executors=n_executors, admission_enabled=admission, scheduler=scheduler,
+        autoscaler=autoscaler, reserve_executors=reserve_executors,
     )
     if scheduler_kwargs:
         sys_.coordinator.scheduler = Scheduler(sys_.profiles, **scheduler_kwargs)
@@ -69,9 +81,12 @@ def run_lego_trace(
     scheduler: Optional[Scheduler] = None,
     scheduler_kwargs: Optional[Dict[str, Any]] = None,
     solo: Optional[Dict[str, float]] = None,
+    autoscaler: Any = None,
+    reserve_executors: int = 0,
 ) -> ServingSystem:
     sys_ = build_lego(workflows, n_executors, admission, scheduler,
-                      scheduler_kwargs)
+                      scheduler_kwargs, autoscaler=autoscaler,
+                      reserve_executors=reserve_executors)
     solo = solo or canonical_solo(workflows)
     for tr in trace:
         sys_.submit(
@@ -114,12 +129,24 @@ def run_mono_trace(
 
 
 def attainment_at(workflows, rate: float, n: int, cv: float, slo: float,
-                  duration: float = 180.0, seed: int = 7) -> Dict[str, float]:
-    """Attainment of lego + the three baselines on one trace."""
+                  duration: float = 180.0, seed: int = 7,
+                  with_autoscaled: bool = False) -> Dict[str, float]:
+    """Attainment of lego + the three baselines on one trace.  With
+    ``with_autoscaled``, also a per-model-autoscaled lego fleet holding
+    half the devices in cold reserve (same ``n`` total devices): key
+    ``lego-auto``, plus its time-weighted mean fleet size
+    ``lego-auto-fleet``."""
     trace = generate_trace(list(workflows), rate=rate, duration=duration,
                            cv=cv, seed=seed)
     out = {"n_requests": float(len(trace))}
     out["lego"] = run_lego_trace(workflows, trace, n, slo).slo_attainment()
+    if with_autoscaled:
+        base = max(1, n // 2)
+        sys_ = run_lego_trace(workflows, trace, base, slo, autoscaler=True,
+                              reserve_executors=n - base)
+        out["lego-auto"] = sys_.slo_attainment()
+        out["lego-auto-fleet"] = mean_fleet_size(
+            sys_.coordinator.fleet_log, serving_horizon(sys_.coordinator), base)
     for mode in ("diffusers", "diffusers-c", "diffusers-s"):
         out[mode] = run_mono_trace(workflows, trace, n, mode, slo).slo_attainment()
     return out

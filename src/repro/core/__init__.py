@@ -5,10 +5,11 @@ Public surface:
 * DSL      -- Model, Workflow, compose
 * Compiler -- GraphCompiler, optimization passes
 * Runtime  -- Coordinator, ServingSystem
-* Policy   -- Scheduler, AdmissionController
+* Policy   -- Scheduler, AdmissionController, Autoscaler
 """
 
 from repro.core.admission import AdmissionController, critical_path_seconds
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScaleAction
 from repro.core.compiler import CompiledGraph, CompileError, GraphCompiler, Pass
 from repro.core.datastore import DataEngine, FetchFuture
 from repro.core.executor import Executor, LocalBackend, OutOfMemory

@@ -23,6 +23,21 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.model import Model
 from repro.core.profiles import ProfileStore
 
+# Lifecycle states (autoscaler-managed; a fixed fleet stays SERVING forever):
+#
+#   RESERVE -> PROVISIONING -> WARMING -> SERVING -> DRAINING -> RESERVE
+#
+# RESERVE       cold standby — no device state, never scheduled;
+# PROVISIONING  acquired for a model, waiting for the warm-up to start;
+# WARMING       streaming the target model's weights host->HBM;
+# SERVING       schedulable (the only state the Scheduler scores);
+# DRAINING      finishing its current batch, then retires/unassigns.
+RESERVE = "reserve"
+PROVISIONING = "provisioning"
+WARMING = "warming"
+SERVING = "serving"
+DRAINING = "draining"
+
 
 class OutOfMemory(RuntimeError):
     pass
@@ -35,6 +50,7 @@ class Executor:
         profiles: ProfileStore,
         memory_capacity: Optional[float] = None,
         pod: int = 0,
+        state: str = SERVING,
     ) -> None:
         self.id = executor_id
         self.profiles = profiles
@@ -46,10 +62,16 @@ class Executor:
         self.patch_state: Dict[str, List[str]] = {}
         self.busy_until: float = 0.0
         self.alive: bool = True
+        # lifecycle (autoscaler)
+        self.state: str = state
+        self.reserve_born: bool = state == RESERVE
+        self.warming_model: Optional[str] = None
+        self.assigned_models: set = set()   # models this executor was scaled for
         # accounting
         self.busy_time: float = 0.0
         self.models_loaded_count: int = 0
         self.bytes_loaded: float = 0.0
+        self.scale_events: int = 0
 
     # ------------------------------------------------------------- memory
     @property
@@ -100,9 +122,56 @@ class Executor:
     def set_patches(self, model_id: str, patch_ids: List[str]) -> None:
         self.patch_state[model_id] = list(patch_ids)
 
+    # ----------------------------------------------------------- lifecycle
+    @property
+    def is_serving(self) -> bool:
+        return self.alive and self.state == SERVING
+
+    def begin_provisioning(self, model_id: str) -> None:
+        assert self.state in (RESERVE, SERVING), self.state
+        self.state = PROVISIONING
+        self.warming_model = model_id
+
+    def begin_warming(self) -> None:
+        assert self.state == PROVISIONING, self.state
+        self.state = WARMING
+
+    def finish_warming(self, nbytes: float) -> None:
+        """Warm-pool handoff complete: weights resident, open for dispatch."""
+        assert self.state == WARMING and self.warming_model is not None
+        self.mark_loaded(self.warming_model, nbytes)
+        self.assigned_models.add(self.warming_model)
+        self.warming_model = None
+        self.state = SERVING
+        self.scale_events += 1
+
+    def begin_draining(self, model_id: str) -> None:
+        assert self.state == SERVING, self.state
+        self.state = DRAINING
+        self.warming_model = model_id    # the model being retired
+
+    def finish_draining(self) -> None:
+        """Current batch done: evict the retired model; reserve-born
+        executors give the device back entirely."""
+        assert self.state == DRAINING
+        mid = self.warming_model
+        self.warming_model = None
+        if mid is not None:
+            self.loaded.pop(mid, None)
+            self.patch_state.pop(mid, None)
+            self.assigned_models.discard(mid)
+        if self.reserve_born:
+            self.loaded.clear()
+            self.patch_state.clear()
+            self.assigned_models.clear()
+            self.state = RESERVE
+        else:
+            self.state = SERVING
+        self.scale_events += 1
+
     # ------------------------------------------------------------ timeline
     def is_free(self, now: float) -> bool:
-        return self.alive and self.busy_until <= now
+        return self.is_serving and self.busy_until <= now
 
     def occupy(self, now: float, duration: float) -> float:
         start = max(now, self.busy_until)
@@ -114,10 +183,12 @@ class Executor:
         self.alive = False
         self.loaded.clear()
         self.patch_state.clear()
+        self.assigned_models.clear()
+        self.warming_model = None
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (
-            f"<Executor {self.id} pod={self.pod} "
+            f"<Executor {self.id} pod={self.pod} {self.state} "
             f"models={list(self.loaded)} busy_until={self.busy_until:.3f}>"
         )
 

@@ -73,6 +73,8 @@ class CoordinatorGroup:
         max_coordinators: int = 4,
         hw: HardwareSpec = GPU_H800,
         admission_enabled: bool = True,
+        autoscaler: Any = None,
+        reserve_executors: int = 0,
     ) -> None:
         probe = ServingSystem(n_executors=1, hw=hw)
 
@@ -104,11 +106,30 @@ class CoordinatorGroup:
         while sum(sizes) < n_executors:
             sizes[sizes.index(min(sizes))] += 1
 
+        # reserves proportional to each shard's executor share (>=1 if any)
+        reserves = [0] * len(sizes)
+        if reserve_executors:
+            reserves = [max(1, round(reserve_executors * s / n_executors))
+                        for s in sizes]
+            while sum(reserves) > reserve_executors:
+                reserves[reserves.index(max(reserves))] -= 1
+            while sum(reserves) < reserve_executors:
+                reserves[reserves.index(min(reserves))] += 1
+
+        # shards have independent clocks and fleets: a shared Autoscaler
+        # instance would conflate their cooldowns/windows/action logs, so
+        # each shard builds its own policy from the config
+        from repro.core.autoscaler import Autoscaler
+        if isinstance(autoscaler, Autoscaler):
+            autoscaler = autoscaler.config
+
         self.systems: List[ServingSystem] = []
         self.route: Dict[str, int] = {}
         for i, (b, size) in enumerate(zip(bins, sizes)):
             sys_ = ServingSystem(n_executors=size, hw=hw,
-                                 admission_enabled=admission_enabled)
+                                 admission_enabled=admission_enabled,
+                                 autoscaler=autoscaler,
+                                 reserve_executors=reserves[i])
             for name in b[1]:
                 sys_.register(templates[name])
                 self.route[name] = i

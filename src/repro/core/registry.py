@@ -10,8 +10,9 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core.admission import AdmissionController
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
 from repro.core.compiler import CompiledGraph, GraphCompiler, Pass
-from repro.core.executor import Executor, LocalBackend
+from repro.core.executor import RESERVE, Executor, LocalBackend
 from repro.core.passes import default_passes
 from repro.core.profiles import GPU_H800, HardwareSpec, ProfileStore
 from repro.core.runtime import Coordinator, Request
@@ -52,7 +53,14 @@ class ServingSystem:
         backend: Optional[LocalBackend] = None,
         pods: int = 1,
         executor_memory: Optional[float] = None,
+        autoscaler: Any = None,
+        reserve_executors: int = 0,
     ) -> None:
+        """``autoscaler`` enables per-model elastic scaling: pass ``True``
+        for the default policy, an :class:`AutoscalerConfig`, or a built
+        :class:`Autoscaler`.  ``reserve_executors`` adds that many cold
+        standby devices the autoscaler may bring into service (they are
+        never scheduled while in reserve)."""
         self.profiles = ProfileStore(hw)
         passes = default_passes()
         if extra_passes:
@@ -63,12 +71,27 @@ class ServingSystem:
             Executor(i, self.profiles, memory_capacity=executor_memory, pod=i // per_pod)
             for i in range(n_executors)
         ]
+        for j in range(reserve_executors):
+            executors.append(Executor(
+                n_executors + j, self.profiles, memory_capacity=executor_memory,
+                pod=(n_executors + j) // per_pod, state=RESERVE,
+            ))
+        asc: Optional[Autoscaler] = None
+        if autoscaler is True:
+            asc = Autoscaler(self.profiles)
+        elif isinstance(autoscaler, AutoscalerConfig):
+            asc = Autoscaler(self.profiles, autoscaler)
+        elif isinstance(autoscaler, Autoscaler):
+            asc = autoscaler
+        elif autoscaler not in (None, False):
+            raise TypeError(f"autoscaler: {autoscaler!r}")
         self.coordinator = Coordinator(
             executors,
             self.profiles,
             scheduler=scheduler or Scheduler(self.profiles),
             admission=AdmissionController(self.profiles, enabled=admission_enabled),
             backend=backend,
+            autoscaler=asc,
         )
 
     # ---------------------------------------------------------------- API
@@ -93,6 +116,10 @@ class ServingSystem:
     @property
     def executors(self) -> List[Executor]:
         return self.coordinator.executors
+
+    @property
+    def autoscaler(self) -> Optional[Autoscaler]:
+        return self.coordinator.autoscaler
 
     def slo_attainment(self, include_rejected: bool = True) -> float:
         return self.coordinator.slo_attainment(include_rejected)

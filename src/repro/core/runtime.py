@@ -26,9 +26,18 @@ import time as _time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.admission import AdmissionController, critical_path_seconds
+from repro.core.autoscaler import Autoscaler, ScaleAction
 from repro.core.compiler import CompiledGraph
 from repro.core.datastore import DataEngine
-from repro.core.executor import Executor, LocalBackend
+from repro.core.executor import (
+    DRAINING,
+    PROVISIONING,
+    RESERVE,
+    SERVING,
+    WARMING,
+    Executor,
+    LocalBackend,
+)
 from repro.core.profiles import ProfileStore
 from repro.core.scheduler import ScheduledBatch, Scheduler
 from repro.core.types import ValueRef, nbytes_of
@@ -44,6 +53,7 @@ class RequestNode:
     __slots__ = (
         "request", "node", "uid", "state", "pending_eager", "deferred_arrivals",
         "own_done_time", "executor_ids", "seq", "infer_est", "dispatch_time",
+        "ready_since",
     )
 
     def __init__(self, request: "Request", node: Any, infer_est: float) -> None:
@@ -59,6 +69,7 @@ class RequestNode:
         self.seq = next(_seq)
         self.infer_est = infer_est
         self.dispatch_time: Optional[float] = None
+        self.ready_since: Optional[float] = None   # queueing-delay signal
 
     # ---- scheduling views -------------------------------------------------
     @property
@@ -166,6 +177,7 @@ class Coordinator:
         scheduler: Optional[Scheduler] = None,
         admission: Optional[AdmissionController] = None,
         backend: Optional[LocalBackend] = None,
+        autoscaler: Optional[Autoscaler] = None,
     ) -> None:
         self.executors = executors
         self.by_id = {e.id: e for e in executors}
@@ -173,6 +185,11 @@ class Coordinator:
         self.scheduler = scheduler or Scheduler(profiles)
         self.admission = admission or AdmissionController(profiles, enabled=False)
         self.backend = backend
+        self.autoscaler = autoscaler
+        self._tick_scheduled = False
+        self._last_activity = 0.0
+        # (t, n_serving) after every fleet transition — scaling timeline
+        self.fleet_log: List[Tuple[float, int]] = []
         self.engine = DataEngine(profiles, pod_of={e.id: e.pod for e in executors})
         self.now = 0.0
         self.events: List[Tuple[float, int, str, Any]] = []
@@ -208,6 +225,10 @@ class Coordinator:
         heapq.heappush(self.events, (t, next(self._ecount), kind, payload))
 
     def run(self, until: Optional[float] = None) -> None:
+        if self.autoscaler is not None and not self._tick_scheduled and self.events:
+            # anchor the control loop at the first event of this run
+            self._tick_scheduled = True
+            self._push(self.events[0][0], "autoscale_tick", None)
         while self.events:
             t, _, kind, payload = self.events[0]
             if until is not None and t > until:
@@ -216,16 +237,25 @@ class Coordinator:
             self.now = max(self.now, t)
             t0 = _time.perf_counter()
             getattr(self, f"_on_{kind}")(payload)
+            if kind != "autoscale_tick":
+                self._last_activity = self.now
             self._schedule_cycle()
             self.control_plane_time += _time.perf_counter() - t0
 
     # -------------------------------------------------------------- events
     def _on_arrival(self, req: Request) -> None:
         backlog = sum(r.remaining_work for r in self.inflight.values())
-        alive = sum(1 for e in self.executors if e.alive)
-        if not self.admission.decide(self.now, req.graph, req.slo_seconds, backlog, alive):
+        if not self.admission.decide(self.now, req.graph, req.slo_seconds,
+                                     backlog, self.n_schedulable):
             req.status = "rejected"
             self.rejected.append(req)
+            if self.autoscaler is not None:
+                # shed demand is still demand: attribute it to the models
+                # the request would have run so the fleet can grow
+                self.autoscaler.note_rejection(self.now, [
+                    n.op.model_id for n in req.graph.nodes
+                    if not (n.attrs.get("inline") or n.attrs.get("io_only"))
+                ])
             return
         self.inflight[req.rid] = req
         # materialize workflow inputs in the (frontend) data store
@@ -267,6 +297,7 @@ class Coordinator:
                     rn.state = READY
                     rn.executor_ids = []
                     rn.own_done_time = None
+                    rn.ready_since = self.now
                     if not rn.node.attrs.get("inline") and not rn.node.attrs.get("io_only"):
                         self.ready.append(rn)
         # lineage-based recovery of lost values
@@ -310,6 +341,97 @@ class Coordinator:
         if rnode.pending_eager == 0 and not missing_parent:
             self._node_ready(rnode)
 
+    # ---------------------------------------------------------- autoscaling
+    @property
+    def n_schedulable(self) -> int:
+        """Capacity view for admission: executors serving now or within one
+        warm-up (provisioning/warming).  Cold reserves don't count."""
+        return sum(1 for e in self.executors
+                   if e.alive and e.state in (SERVING, WARMING, PROVISIONING))
+
+    def _log_fleet(self) -> None:
+        self.fleet_log.append(
+            (self.now, sum(1 for e in self.executors if e.is_serving)))
+
+    def _on_autoscale_tick(self, _payload: Any) -> None:
+        self._tick_scheduled = False
+        asc = self.autoscaler
+        if asc is None:
+            return
+        actions = asc.decide(self.now, self.ready, self.executors)
+        for a in actions:
+            self._apply_scale_action(a)
+        if actions:
+            self._last_activity = self.now
+        cfg = asc.config
+        transitional = any(
+            e.alive and e.state in (PROVISIONING, WARMING, DRAINING)
+            for e in self.executors)
+        # keep ticking while work remains, transitions are in flight, or a
+        # scale-down could still fire (bounded linger past the last action,
+        # so the loop always terminates once the fleet settles).  Inflight
+        # work only counts if the fleet can still make progress — with
+        # every executor dead, ticking would spin forever
+        linger = cfg.down_idle_seconds + cfg.down_cooldown + 2 * cfg.tick_interval
+        can_progress = self.inflight and any(e.alive for e in self.executors)
+        if (self.events or can_progress or transitional
+                or self.now - self._last_activity < linger):
+            self._tick_scheduled = True
+            self._push(self.now + cfg.tick_interval, "autoscale_tick", None)
+
+    def _apply_scale_action(self, action: ScaleAction) -> None:
+        ex = self.by_id[action.executor_id]
+        if action.kind == "scale_up":
+            if not ex.alive or ex.state not in (RESERVE, SERVING):
+                return
+            ex.begin_provisioning(action.model_id)
+            self._log_fleet()
+            self._push(self.now + self.autoscaler.config.provision_delay,
+                       "provision_done", ex.id)
+        else:  # scale_down: drain, then evict/retire
+            if not ex.alive or ex.state != SERVING:
+                return
+            ex.begin_draining(action.model_id)
+            self._log_fleet()
+            if ex.busy_until <= self.now:
+                self._finish_drain(ex)
+            else:
+                self._push(ex.busy_until, "drain_done", ex.id)
+
+    def _on_provision_done(self, executor_id: int) -> None:
+        ex = self.by_id[executor_id]
+        if not ex.alive or ex.state != PROVISIONING:
+            return
+        ex.begin_warming()
+        mid = ex.warming_model
+        load = self.profiles.get(mid).load_time() if self.profiles.known(mid) else 0.0
+        self._push(self.now + load, "warm_done", executor_id)
+
+    def _on_warm_done(self, executor_id: int) -> None:
+        """Warm-pool handoff: weights are resident *before* the executor is
+        opened for dispatch, so its first batch pays L_load = 0."""
+        ex = self.by_id[executor_id]
+        if not ex.alive or ex.state != WARMING:
+            return
+        mid = ex.warming_model
+        nbytes = self.profiles.get(mid).param_bytes if self.profiles.known(mid) else 0.0
+        ex.ensure_capacity(nbytes)     # evict idle LRU residents if needed
+        ex.finish_warming(nbytes)
+        self._log_fleet()
+
+    def _on_drain_done(self, executor_id: int) -> None:
+        ex = self.by_id[executor_id]
+        if not ex.alive or ex.state != DRAINING:
+            return
+        if ex.busy_until <= self.now:
+            self._finish_drain(ex)
+        else:   # deferred fetches extended the batch; retry at the new end
+            self._push(ex.busy_until, "drain_done", executor_id)
+
+    def _finish_drain(self, ex: Executor) -> None:
+        ex.finish_draining()
+        self._log_fleet()
+
     # ----------------------------------------------------------- lifecycle
     def _node_ready(self, rnode: RequestNode) -> None:
         attrs = rnode.node.attrs
@@ -324,6 +446,7 @@ class Coordinator:
             self._push(self.now + dur, "io_done", rnode)
         else:
             rnode.state = READY
+            rnode.ready_since = self.now
             self.ready.append(rnode)
 
     def _schedule_cycle(self) -> None:
@@ -363,8 +486,8 @@ class Coordinator:
                 keys.extend(rn.input_keys(eager_only=True))
             return self.engine.batch_fetch_cost(keys, executor_id)
 
-        n_alive = sum(1 for e in self.executors if e.alive)
-        low_load = len(self.inflight) < n_alive
+        n_serving = sum(1 for e in self.executors if e.is_serving)
+        low_load = len(self.inflight) < n_serving
         decisions = self.scheduler.schedule_cycle(self.ready, free, fetch_cost,
                                                   low_load=low_load)
         for d in decisions:
@@ -573,3 +696,10 @@ class Coordinator:
 
     def total_busy_time(self) -> float:
         return sum(e.busy_time for e in self.executors)
+
+    def scale_actions(self, kind: Optional[str] = None) -> List[ScaleAction]:
+        if self.autoscaler is None:
+            return []
+        if kind is None:
+            return list(self.autoscaler.actions)
+        return [a for a in self.autoscaler.actions if a.kind == kind]

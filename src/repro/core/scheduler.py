@@ -135,7 +135,10 @@ class Scheduler:
             l_infer = profile.infer_time(len(batch), k)
             score = l_data + l_load + swap + l_infer
             scored.append((score, l_data, l_load, swap, e))
-        scored.sort(key=lambda s: (s[0], s[4].id))
+        # equal-score tie-break: executors the autoscaler assigned to this
+        # model first, so scaled-up groups absorb their model's traffic
+        scored.sort(key=lambda s: (
+            s[0], 0 if model_id in s[4].assigned_models else 1, s[4].id))
         top = scored[:k]
         lead = top[0]
         return (
@@ -157,7 +160,9 @@ class Scheduler:
         """One full scheduling cycle: greedily drain ready nodes onto free
         executors.  ``ready`` is mutated (dispatched nodes removed)."""
         decisions: List[ScheduledBatch] = []
-        avail = [e for e in executors if e.alive]  # caller pre-filters by freeness
+        # only SERVING executors take work: warming/draining/reserve fleet
+        # members are invisible to placement (caller pre-filters by freeness)
+        avail = [e for e in executors if e.is_serving]
         ready.sort(key=self.order_key)
         while ready and avail:
             head = ready[0]

@@ -2,8 +2,10 @@
 
 from repro.sim.metrics import (
     RequestRecord,
+    executor_seconds,
     goodput,
     latency_cdf,
+    mean_fleet_size,
     mean_latency,
     percentile_latency,
     slo_attainment,

@@ -53,6 +53,36 @@ def goodput(records: Sequence[RequestRecord], duration: float) -> float:
     return sum(1 for r in records if r.attained) / duration
 
 
+def executor_seconds(
+    fleet_log: Sequence[tuple],
+    t_end: float,
+    initial: int,
+    t_start: float = 0.0,
+) -> float:
+    """Integrate a step-function fleet timeline (the coordinator's
+    ``fleet_log`` of ``(t, n_serving)`` transitions) over [t_start, t_end].
+    Divide by the horizon for the time-weighted mean fleet size — the
+    denominator of goodput-per-device, the autoscaler's efficiency
+    metric."""
+    if t_end <= t_start:
+        return 0.0
+    total, t, n = 0.0, t_start, initial
+    for ts, ns in fleet_log:
+        ts = min(max(ts, t_start), t_end)
+        total += n * (ts - t)
+        t, n = ts, ns
+    total += n * (t_end - t)
+    return total
+
+
+def mean_fleet_size(fleet_log: Sequence[tuple], t_end: float, initial: int,
+                    t_start: float = 0.0) -> float:
+    horizon = t_end - t_start
+    if horizon <= 0:
+        return float(initial)
+    return executor_seconds(fleet_log, t_end, initial, t_start) / horizon
+
+
 def latency_cdf(records: Sequence[RequestRecord], points: int = 50) -> List[tuple]:
     lats = sorted(r.latency for r in records if r.latency is not None)
     if not lats:

@@ -1,0 +1,122 @@
+"""Per-model autoscaler: burst scale-up, idle scale-down, no-thrash,
+warm-pool handoff, and end-to-end benefit over a fixed fleet."""
+
+import pytest
+
+from repro.core import AutoscalerConfig, Scheduler, ServingSystem
+from repro.core.executor import RESERVE, SERVING
+from repro.sim import mean_fleet_size
+
+# fast control loop for the toy timescale (requests are ~1s of work)
+CFG = AutoscalerConfig(
+    tick_interval=0.1, window=2.0, up_queue_per_warm=2.0,
+    down_idle_seconds=0.8, down_util_below=0.25,
+    up_cooldown=0.2, down_cooldown=0.4, provision_delay=0.05,
+)
+
+
+def _burst_system(toy_workflow, n_req=20, base=2, reserve=2, **sys_kw):
+    sys_ = ServingSystem(n_executors=base, autoscaler=CFG,
+                         reserve_executors=reserve, **sys_kw)
+    sys_.register(toy_workflow)
+    for i in range(n_req):
+        sys_.submit("toy_cn", inputs={"seed": i, "prompt": "p"},
+                    arrival=i * 0.02, steps=4)
+    return sys_
+
+
+def test_scale_up_under_burst(toy_workflow):
+    sys_ = _burst_system(toy_workflow)
+    sys_.run()
+    c = sys_.coordinator
+    ups = c.scale_actions("scale_up")
+    assert ups, "a 20-request burst on 2 executors must trigger scale-up"
+    reserve_used = [e for e in c.executors if e.reserve_born and e.scale_events]
+    assert reserve_used, "scale-up must activate reserve executors"
+    # the fleet timeline actually grew past the base size
+    assert any(n > 2 for _, n in c.fleet_log)
+    assert all(r.status == "done" for r in c.finished)
+
+
+def test_scale_down_on_idle(toy_workflow):
+    sys_ = _burst_system(toy_workflow)
+    sys_.run()
+    c = sys_.coordinator
+    assert c.scale_actions("scale_down"), "idle fleet must scale back down"
+    for e in c.executors:
+        if e.reserve_born:
+            assert e.state == RESERVE, \
+                f"reserve-born executor {e.id} must return to reserve, is {e.state}"
+        else:
+            assert e.state == SERVING
+    # time-weighted fleet stays between base and base+reserve
+    mean = mean_fleet_size(c.fleet_log, c.now, 2)
+    assert 2.0 <= mean <= 4.0
+
+
+def test_no_thrash_under_steady_load(toy_workflow):
+    sys_ = ServingSystem(n_executors=2, autoscaler=CFG, reserve_executors=2)
+    sys_.register(toy_workflow)
+    for i in range(30):   # well under capacity, evenly spaced
+        sys_.submit("toy_cn", inputs={"seed": i, "prompt": "p"},
+                    arrival=i * 1.0, steps=4)
+    sys_.run()
+    c = sys_.coordinator
+    assert len(c.scale_actions()) <= 2, \
+        f"steady load must not thrash: {c.scale_actions()}"
+
+
+def test_warm_pool_handoff(toy_workflow):
+    """A scaled-up executor pre-loads weights while warming: its first
+    batch is dispatched with L_load == 0."""
+    sys_ = _burst_system(
+        toy_workflow,
+        scheduler=None,
+    )
+    # single-executor batches so l_load is exactly the target's load term
+    sys_.coordinator.scheduler = Scheduler(sys_.profiles, max_parallelism_cap=1)
+    sys_.run()
+    c = sys_.coordinator
+    ups = c.scale_actions("scale_up")
+    assert ups
+    scaled = {a.executor_id: a.model_id for a in ups}
+    seen = set()
+    for batch in c.dispatch_log:
+        eid = batch.executor_ids[0]
+        if eid in scaled and eid not in seen and batch.model_id == scaled[eid]:
+            seen.add(eid)
+            assert batch.l_load == 0.0, \
+                f"first batch on warmed executor {eid} must not pay L_load"
+    assert seen, "scaled-up executors must receive dispatches of their model"
+
+
+def test_autoscaled_beats_fixed_fleet_under_burst(toy_workflow):
+    def attainment(auto):
+        sys_ = ServingSystem(
+            n_executors=2, admission_enabled=True,
+            autoscaler=CFG if auto else None,
+            reserve_executors=3 if auto else 0)
+        sys_.register(toy_workflow)
+        solo = sys_.solo_latency("toy_cn", steps=4)
+        for i in range(24):
+            sys_.submit("toy_cn", inputs={"seed": i, "prompt": "p"},
+                        arrival=i * 0.05, slo_seconds=3 * solo, steps=4)
+        sys_.run()
+        return sys_.slo_attainment()
+
+    assert attainment(True) > attainment(False)
+
+
+def test_reserves_never_scheduled_without_autoscaler(toy_workflow):
+    sys_ = ServingSystem(n_executors=2, reserve_executors=2)
+    sys_.register(toy_workflow)
+    for i in range(8):
+        sys_.submit("toy_cn", inputs={"seed": i, "prompt": "p"},
+                    arrival=i * 0.02, steps=4)
+    sys_.run()
+    c = sys_.coordinator
+    used = {eid for b in c.dispatch_log for eid in b.executor_ids}
+    for e in c.executors:
+        if e.reserve_born:
+            assert e.id not in used and e.state == RESERVE
+    assert all(r.status == "done" for r in c.finished)

@@ -3,6 +3,8 @@ fault-tolerance properties."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis dependency")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 import jax
