@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import time as _time
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.model import Model
 from repro.core.profiles import ProfileStore
@@ -194,11 +194,28 @@ class Executor:
 
 
 class LocalBackend:
-    """Really-execute backend: loads params and runs ``Model.execute`` on
-    the host JAX device.  Used by the executable plane."""
+    """Really-execute backend: loads params and runs ``Model.execute`` /
+    ``Model.execute_batch`` on the host JAX device.  Used by the executable
+    plane.
+
+    Caches two levels of device state:
+
+    * base components per ``model_id`` (includes LoRA adapters — an
+      adapter's ``load()`` runs once, not once per denoising step);
+    * LoRA-folded parameter sets per ``(model_id, patch_ids)`` placement,
+      so patches fold once per placement instead of on every one of the
+      backbone's ``denoise_steps`` calls.
+    """
 
     def __init__(self) -> None:
         self._components: Dict[str, Dict[str, Any]] = {}
+        # (model_id, (patch_id, ...)) -> patched components
+        self._folded: Dict[Tuple[str, Tuple[str, ...]], Dict[str, Any]] = {}
+        # (model_id, batch_size) per real forward — dispatch accounting
+        self.forward_log: List[Tuple[str, int]] = []
+        # cumulative measured device seconds (load folds + executes):
+        # lets callers separate control-plane overhead from real compute
+        self.exec_seconds: float = 0.0
 
     def ensure_loaded(self, model: Model) -> Tuple[Dict[str, Any], float]:
         """Returns (components, measured load seconds — 0 if cached)."""
@@ -210,12 +227,92 @@ class LocalBackend:
         self._components[model.model_id] = comps
         return comps, dt
 
+    def components_for(
+        self, model: Model, patches: Sequence[Model] = ()
+    ) -> Tuple[Dict[str, Any], float]:
+        """Components with ``patches`` folded in; folds are cached per
+        ``(model_id, patch_ids)``.  Returns (components, load seconds)."""
+        comps, load_dt = self.ensure_loaded(model)
+        patches = list(patches or [])
+        if not patches:
+            return comps, load_dt
+        key = (model.model_id, tuple(p.model_id for p in patches))
+        if key in self._folded:
+            return self._folded[key], load_dt
+        patch_comps = []
+        for p in patches:
+            pc, pdt = self.ensure_loaded(p)
+            load_dt += pdt
+            patch_comps.append(pc)
+        t0 = _time.perf_counter()
+        folded = model.fold_patches(comps, patches, patch_comps)
+        load_dt += _time.perf_counter() - t0
+        self._folded[key] = folded
+        return folded, load_dt
+
     def unload(self, model_id: str) -> None:
         self._components.pop(model_id, None)
+        self._folded = {
+            k: v for k, v in self._folded.items()
+            if k[0] != model_id and model_id not in k[1]
+        }
+
+    @staticmethod
+    def _block(out: Any) -> None:
+        """Wait for async-dispatched device work: the measured duration
+        feeds the coordinator's event timeline, so it must cover the real
+        compute, not just the host-side dispatch."""
+        try:
+            import jax
+
+            jax.block_until_ready(out)
+        except Exception:
+            pass  # non-jax payloads (plain python values) need no sync
 
     def execute(self, model: Model, **kwargs: Any) -> Tuple[Dict[str, Any], float]:
-        comps, _ = self.ensure_loaded(model)
+        patches = kwargs.pop("_patches", None) or []
+        comps, _ = self.components_for(model, patches)
         t0 = _time.perf_counter()
         out = model.execute(comps, **kwargs)
+        self._block(out)
         dt = _time.perf_counter() - t0
+        self.forward_log.append((model.model_id, 1))
+        self.exec_seconds += dt
         return out, dt
+
+    def execute_batch(
+        self,
+        model: Model,
+        batch_kwargs: List[Dict[str, Any]],
+        patches: Sequence[Model] = (),
+    ) -> Tuple[List[Dict[str, Any]], float, float]:
+        """One stacked forward for a whole ScheduledBatch.  Returns
+        (per-request outputs, load seconds, execute seconds).
+
+        Patches may arrive either via ``patches`` (the serving runtime) or
+        as a uniform per-request ``_patches`` kwarg (direct callers); a
+        mixed per-request set is passed through so the model's own
+        fallback can fold per item."""
+        per_item = [kw.get("_patches") or [] for kw in batch_kwargs]
+        ids = [tuple(p.model_id for p in ps) for ps in per_item]
+        uniform = all(i == ids[0] for i in ids[1:])
+        if uniform:
+            if not list(patches or []) and per_item[0]:
+                patches = per_item[0]
+            clean = [{k: v for k, v in kw.items() if k != "_patches"}
+                     for kw in batch_kwargs]
+        else:
+            clean = [dict(kw) for kw in batch_kwargs]
+        comps, load_dt = self.components_for(model, patches)
+        model._batch_was_stacked = True
+        t0 = _time.perf_counter()
+        outs = model.execute_batch(comps, clean)
+        self._block(outs)
+        exec_dt = _time.perf_counter() - t0
+        if model._batch_was_stacked:
+            self.forward_log.append((model.model_id, len(batch_kwargs)))
+        else:   # model fell back to per-request execution: log what ran
+            self.forward_log.extend(
+                (model.model_id, 1) for _ in batch_kwargs)
+        self.exec_seconds += load_dt + exec_dt
+        return outs, load_dt, exec_dt

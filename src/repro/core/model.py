@@ -11,7 +11,7 @@ paper.
 from __future__ import annotations
 
 import abc
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.types import (
     Port,
@@ -180,6 +180,131 @@ class Model(abc.ABC):
     def execute(self, model_components: Dict[str, Any], **kwargs: Any) -> Dict[str, Any]:
         """Run inference.  Must return a dict keyed by declared outputs."""
         raise NotImplementedError
+
+    # --------------------------------------------------- batched execution
+    def execute_batch(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        """Run inference for several requests in ONE forward (§5.1).
+
+        The default implementation stacks every ``TensorType`` input along
+        the batch axis (axis 0), requires non-tensor inputs to agree across
+        the batch, runs :meth:`execute` once, and splits ``TensorType``
+        outputs back per request.  Models whose batch axis is not axis 0 on
+        every port (e.g. the MMDiT backbone's layer-major ControlNet
+        residuals) override this with a shape-aware version.
+
+        Falls back to sequential per-request execution whenever the batch
+        cannot be stacked soundly.  Overrides MUST route their fallbacks
+        through :meth:`_execute_sequential` — it clears the
+        ``_batch_was_stacked`` flag the executor backend reads for forward
+        accounting.
+        """
+        if len(batch_kwargs) == 1:
+            return [self.execute(model_components, **batch_kwargs[0])]
+        stacked, sizes = self._stack_inputs(batch_kwargs)
+        if stacked is None:
+            return self._execute_sequential(model_components, batch_kwargs)
+        out = self.execute(model_components, **stacked)
+        return self._split_outputs(out, sizes)
+
+    # Set by the executor backend before each execute_batch call and
+    # cleared by _execute_sequential, so forward accounting reflects what
+    # actually ran (one stacked forward vs N fallback forwards).
+    _batch_was_stacked: bool = True
+
+    def _execute_sequential(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        """Per-request fallback when a batch cannot be stacked soundly."""
+        self._batch_was_stacked = False
+        return [self.execute(model_components, **kw) for kw in batch_kwargs]
+
+    @staticmethod
+    def _literals_equal(a: Any, b: Any) -> bool:
+        if a is b:
+            return True
+        try:
+            return bool(a == b)
+        except Exception:
+            return False
+
+    def _stack_inputs(
+        self, batch_kwargs: List[Dict[str, Any]]
+    ) -> Tuple[Optional[Dict[str, Any]], Optional[List[int]]]:
+        """Concatenate TensorType inputs along axis 0; None when unsound."""
+        from repro.core.types import TensorType
+
+        names = set(batch_kwargs[0])
+        if any(set(kw) != names for kw in batch_kwargs[1:]):
+            return None, None
+        stacked: Dict[str, Any] = {}
+        sizes: Optional[List[int]] = None
+        for name in names:
+            vals = [kw[name] for kw in batch_kwargs]
+            port = self._inputs.get(name)
+            tensor_port = port is not None and isinstance(port.type, TensorType)
+            if tensor_port and all(hasattr(v, "shape") and getattr(v, "ndim", 0) > 0
+                                   for v in vals):
+                if any(v.shape[1:] != vals[0].shape[1:] for v in vals[1:]):
+                    return None, None
+                these = [int(v.shape[0]) for v in vals]
+                if sizes is None:
+                    sizes = these
+                elif these != sizes:
+                    return None, None
+                import jax.numpy as jnp
+
+                stacked[name] = jnp.concatenate(vals, axis=0)
+            else:
+                if any(not self._literals_equal(v, vals[0]) for v in vals[1:]):
+                    return None, None
+                stacked[name] = vals[0]
+        if sizes is None:      # nothing tensor-valued to stack
+            return None, None
+        return stacked, sizes
+
+    def _split_outputs(
+        self, out: Dict[str, Any], sizes: List[int]
+    ) -> List[Dict[str, Any]]:
+        """Split axis-0-stacked TensorType outputs back per request."""
+        from repro.core.types import TensorType
+
+        total = sum(sizes)
+        results: List[Dict[str, Any]] = [dict() for _ in sizes]
+        for name, val in out.items():
+            port = self._outputs.get(name)
+            splittable = (
+                port is not None
+                and isinstance(port.type, TensorType)
+                and hasattr(val, "shape")
+                and getattr(val, "ndim", 0) > 0
+                and int(val.shape[0]) == total
+            )
+            if splittable:
+                off = 0
+                for i, n in enumerate(sizes):
+                    results[i][name] = val[off:off + n]
+                    off += n
+            else:
+                for r in results:
+                    r[name] = val
+        return results
+
+    def fold_patches(
+        self,
+        components: Dict[str, Any],
+        patches: List["Model"],
+        patch_components: List[Dict[str, Any]],
+    ) -> Dict[str, Any]:
+        """Return ``components`` with weight patches (LoRA-class) folded in.
+
+        Called by the executor backend ONCE per ``(model_id, patch_ids)``
+        placement — the folded result is cached, so per-step execution never
+        re-folds.  The default ignores patches (models without patchable
+        weights).  Must be purely functional: the input pytree stays intact.
+        """
+        return components
 
     # ------------------------------------------------------------ costing
     def cost(self) -> ModelCost:

@@ -88,7 +88,8 @@ class ServingSystem:
         self.coordinator = Coordinator(
             executors,
             self.profiles,
-            scheduler=scheduler or Scheduler(self.profiles),
+            scheduler=scheduler or Scheduler(
+                self.profiles, use_declared_max_batch=backend is not None),
             admission=AdmissionController(self.profiles, enabled=admission_enabled),
             backend=backend,
             autoscaler=asc,

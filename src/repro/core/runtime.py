@@ -182,7 +182,10 @@ class Coordinator:
         self.executors = executors
         self.by_id = {e.id: e for e in executors}
         self.profiles = profiles
-        self.scheduler = scheduler or Scheduler(profiles)
+        # executable plane defaults to the declared B_max (real stacked
+        # forwards are measured, so the architectural cap governs)
+        self.scheduler = scheduler or Scheduler(
+            profiles, use_declared_max_batch=backend is not None)
         self.admission = admission or AdmissionController(profiles, enabled=False)
         self.backend = backend
         self.autoscaler = autoscaler
@@ -535,24 +538,38 @@ class Coordinator:
         self._push(self.now + duration, "batch_done", {"batch": batch})
 
     def _execute_real(self, batch: ScheduledBatch) -> float:
-        """Executable plane: really run each node; returns measured seconds."""
+        """Executable plane: run the whole ScheduledBatch as ONE stacked
+        forward per model (§5.1), splitting outputs back per request.
+        Returns measured seconds.
+
+        Nodes are grouped by concrete op class before stacking: a
+        ``ScheduledBatch`` keys on ``model_id`` only, and two models may
+        share weights under one ``model_id`` with different signatures
+        (e.g. ``VAEEncode``/``VAEDecode``) — those execute as separate
+        stacked forwards over the same cached components.
+        """
         total = 0.0
+        groups: Dict[type, List[RequestNode]] = {}
         for rn in batch.nodes:
-            req = rn.request
-            kwargs: Dict[str, Any] = {}
-            for name, v in rn.node.inputs.items():
-                if isinstance(v, ValueRef):
-                    kwargs[name] = self.engine.value_of(req.ref_key(v))
-                else:
-                    kwargs[name] = v
-            patches = rn.effective_patches
-            if patches:
-                kwargs["_patches"] = [
-                    p for p in rn.node.op.patches if p.model_id in patches
-                ]
-            _, load_dt = self.backend.ensure_loaded(rn.node.op)
-            out, exec_dt = self.backend.execute(rn.node.op, **kwargs)
-            rn.request.output_values[rn.uid] = out
+            groups.setdefault(type(rn.node.op), []).append(rn)
+        for rns in groups.values():
+            lead = rns[0]
+            op = lead.node.op
+            effective = lead.effective_patches
+            patches = [p for p in op.patches if p.model_id in effective]
+            batch_kwargs: List[Dict[str, Any]] = []
+            for rn in rns:
+                kwargs: Dict[str, Any] = {}
+                for name, v in rn.node.inputs.items():
+                    if isinstance(v, ValueRef):
+                        kwargs[name] = self.engine.value_of(rn.request.ref_key(v))
+                    else:
+                        kwargs[name] = v
+                batch_kwargs.append(kwargs)
+            outs, load_dt, exec_dt = self.backend.execute_batch(
+                op, batch_kwargs, patches=patches)
+            for rn, out in zip(rns, outs):
+                rn.request.output_values[rn.uid] = out
             total += load_dt + exec_dt
         return total
 

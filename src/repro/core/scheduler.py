@@ -54,12 +54,22 @@ class Scheduler:
         enable_sharing: bool = True,
         fixed_parallelism: Optional[int] = None,
         max_parallelism_cap: Optional[int] = None,
+        max_batch_cap: Optional[int] = None,
+        use_declared_max_batch: bool = False,
     ) -> None:
         self.profiles = profiles
         self.adaptive_parallelism = adaptive_parallelism
         self.enable_sharing = enable_sharing
         self.fixed_parallelism = fixed_parallelism
         self.max_parallelism_cap = max_parallelism_cap
+        # cap on cross-request batch size (ablation/benchmark knob;
+        # max_batch_cap=1 forces per-request sequential dispatch)
+        self.max_batch_cap = max_batch_cap
+        # executable plane: batch up to the model's DECLARED B_max
+        # (ModelCost.max_batch) instead of the analytic profile's effective
+        # B_max, which is derived from real-scale costs and says nothing
+        # about the measured toy models actually being executed
+        self.use_declared_max_batch = use_declared_max_batch
 
     # ----------------------------------------------------------- ordering
     @staticmethod
@@ -69,11 +79,15 @@ class Scheduler:
     # ------------------------------------------------------------ batching
     def form_batch(self, head: Any, ready: Sequence[Any]) -> List[Any]:
         profile = self.profiles.get(head.model_id)
+        max_batch = (profile.cost.max_batch if self.use_declared_max_batch
+                     else profile.max_batch)
+        if self.max_batch_cap is not None:
+            max_batch = min(max_batch, self.max_batch_cap)
         batch = [head]
         if not self.enable_sharing:
             # monolithic-style: only batch nodes from the same workflow type
             for rn in ready:
-                if len(batch) >= profile.max_batch:
+                if len(batch) >= max_batch:
                     break
                 if (
                     rn is not head
@@ -83,7 +97,7 @@ class Scheduler:
                     batch.append(rn)
             return batch
         for rn in ready:
-            if len(batch) >= profile.max_batch:
+            if len(batch) >= max_batch:
                 break
             if rn is not head and rn.batch_key == head.batch_key:
                 batch.append(rn)

@@ -10,7 +10,8 @@
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import zlib
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,16 @@ from repro.nn.layers import (
 )
 
 Params = Dict[str, Any]
+
+
+def stable_hash(s: str) -> int:
+    """Process-stable string hash for PRNG seeding and toy tokenization.
+
+    Python's builtin ``hash`` is salted by ``PYTHONHASHSEED``, so two
+    executor processes loading the same ``model_id`` would initialize
+    different weights.  CRC32 is deterministic everywhere.
+    """
+    return zlib.crc32(s.encode("utf-8"))
 
 
 # ------------------------------------------------------------ text encoder
@@ -73,12 +84,24 @@ def text_encoder_apply(params: Params, token_ids: jax.Array, n_heads: int) -> ja
     return rms_norm(x, params["final"])
 
 
-def tokenize(prompt: str, vocab: int, max_len: int) -> jnp.ndarray:
-    """Deterministic toy tokenizer: hash words into the vocab."""
-    ids = [hash(w) % (vocab - 2) + 2 for w in prompt.lower().split()][: max_len - 1]
+def _token_ids(prompt: str, vocab: int, max_len: int) -> list:
+    ids = [stable_hash(w) % (vocab - 2) + 2
+           for w in prompt.lower().split()][: max_len - 1]
     ids = [1] + ids
-    ids = ids + [0] * (max_len - len(ids))
-    return jnp.asarray([ids], dtype=jnp.int32)
+    return ids + [0] * (max_len - len(ids))
+
+
+def tokenize(prompt: str, vocab: int, max_len: int) -> jnp.ndarray:
+    """Deterministic toy tokenizer: CRC-hash words into the vocab (stable
+    across processes regardless of ``PYTHONHASHSEED``)."""
+    return jnp.asarray([_token_ids(prompt, vocab, max_len)], dtype=jnp.int32)
+
+
+def tokenize_batch(prompts: Sequence[str], vocab: int, max_len: int) -> jnp.ndarray:
+    """Tokenize a batch of prompts into one [B, max_len] id matrix (one
+    host->device transfer, not one per prompt)."""
+    return jnp.asarray([_token_ids(p, vocab, max_len) for p in prompts],
+                       dtype=jnp.int32)
 
 
 # -------------------------------------------------------------------- VAE

@@ -21,6 +21,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.diffusion.config import DiTConfig
 from repro.diffusion.mmdit import mmdit_apply
+from repro.nn.layers import shard_map_compat
 
 
 def flow_schedule(num_steps: int, shift: float = 1.0) -> jnp.ndarray:
@@ -41,6 +42,39 @@ def denoise_step(latents: jnp.ndarray, velocity: jnp.ndarray,
 def cfg_combine(v_uncond: jnp.ndarray, v_cond: jnp.ndarray,
                 guidance: float) -> jnp.ndarray:
     return v_uncond + guidance * (v_cond - v_uncond)
+
+
+def fused_cfg_velocity(
+    apply_fn: Callable[..., jnp.ndarray],
+    params: Dict[str, Any],
+    latents: jnp.ndarray,
+    t: jnp.ndarray,
+    text_emb: jnp.ndarray,
+    guidance: Any = 4.5,
+    control_residuals: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """One-pass CFG: cond and null embeddings stacked on the batch axis.
+
+    ``apply_fn(params, latents, t, emb, residuals)`` runs ONCE on a 2B
+    batch instead of twice on B — the batch dimension carries both halves,
+    so per denoising step the backbone forward count is halved.
+    ``guidance`` may be a scalar or a per-item [B] vector (cross-request
+    batches with mixed guidance scales).
+    """
+    b = latents.shape[0]
+    lat2 = jnp.concatenate([latents, latents], axis=0)
+    t2 = jnp.concatenate([t, t], axis=0)
+    emb2 = jnp.concatenate([text_emb, jnp.zeros_like(text_emb)], axis=0)
+    res2 = None
+    if control_residuals is not None:
+        # residuals are layer-major [L, B, Ti, d]: batch axis is axis 1
+        res2 = jnp.concatenate([control_residuals, control_residuals], axis=1)
+    v2 = apply_fn(params, lat2, t2, emb2, res2)
+    v_c, v_u = v2[:b], v2[b:]
+    g = jnp.asarray(guidance, v2.dtype)
+    if g.ndim:                       # per-item guidance: broadcast over space
+        g = g.reshape((b,) + (1,) * (v2.ndim - 1))
+    return cfg_combine(v_u, v_c, g)
 
 
 def cfg_velocity(
@@ -88,11 +122,10 @@ def latent_parallel_velocity(
         return jax.lax.psum(weight * v, axis)
 
     emb_pair = jnp.stack([text_emb, null_emb])  # [2, B, Tc, d]
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         shard_fn,
         mesh=mesh,
         in_specs=(P(), P(), P(), P(axis)),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(params, latents, t, emb_pair)

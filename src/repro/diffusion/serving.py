@@ -13,6 +13,7 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.model import Model, ModelCost
 from repro.core.types import Image, TensorType
@@ -21,16 +22,32 @@ from repro.diffusion.config import DiffusionFamily, DiTConfig, FAMILIES
 from repro.diffusion.encoders import (
     init_text_encoder,
     init_vae,
+    stable_hash,
     text_encoder_apply,
     tokenize,
+    tokenize_batch,
     vae_decode,
     vae_encode,
 )
 from repro.diffusion.lora import fold_lora, init_lora, randomize_lora
 from repro.diffusion.mmdit import controlnet_apply, init_controlnet, init_mmdit, mmdit_apply
-from repro.diffusion.sampler import cfg_combine, denoise_step, flow_schedule
+from repro.diffusion.sampler import (
+    denoise_step,
+    flow_schedule,
+    fused_cfg_velocity,
+)
 
 _TOY_VOCAB = 512
+
+
+def _split_rows(val: jnp.ndarray, sizes: List[int], axis: int = 0) -> List[jnp.ndarray]:
+    """Split a stacked batch back into per-request chunks along ``axis``."""
+    out, off = [], 0
+    for n in sizes:
+        idx = (slice(None),) * axis + (slice(off, off + n),)
+        out.append(val[idx])
+        off += n
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -56,6 +73,16 @@ class LatentsGenerator(Model):
         )
         return {"latents": lat}
 
+    def execute_batch(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        cfg = self.family.toy
+        shape = (1, cfg.latent_size, cfg.latent_size, cfg.latent_channels)
+        keys = jnp.stack(
+            [jax.random.PRNGKey(int(kw["seed"])) for kw in batch_kwargs])
+        lats = jax.vmap(lambda k: jax.random.normal(k, shape))(keys)
+        return [{"latents": lats[i]} for i in range(len(batch_kwargs))]
+
     def cost(self) -> ModelCost:
         return ModelCost(1e6, 0, 1e6, self.family.latent_bytes(), max_batch=64)
 
@@ -72,7 +99,7 @@ class TextEncoder(Model):
     def load(self, device: Any = None) -> Dict[str, Any]:
         cfg = self.family.toy
         params = init_text_encoder(
-            jax.random.PRNGKey(hash(self.model_id) % 2**31),
+            jax.random.PRNGKey(stable_hash(self.model_id) % 2**31),
             _TOY_VOCAB, cfg.text_dim, n_layers=2, n_heads=4,
             max_len=cfg.text_tokens,
         )
@@ -84,6 +111,15 @@ class TextEncoder(Model):
         ids = tokenize(kw["prompt"], _TOY_VOCAB, cfg.text_tokens)
         emb = model_components["apply"](model_components["params"], ids)
         return {"prompt_embeds": emb}
+
+    def execute_batch(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        cfg = self.family.toy
+        ids = tokenize_batch([kw["prompt"] for kw in batch_kwargs],
+                             _TOY_VOCAB, cfg.text_tokens)
+        emb = model_components["apply"](model_components["params"], ids)
+        return [{"prompt_embeds": emb[i:i + 1]} for i in range(len(batch_kwargs))]
 
     def cost(self) -> ModelCost:
         f = self.family
@@ -120,36 +156,123 @@ class DiffusionBackbone(Model):
 
     def load(self, device: Any = None) -> Dict[str, Any]:
         cfg = self.family.toy
-        params = init_mmdit(jax.random.PRNGKey(hash(self.model_id) % 2**31), cfg)
+        params = init_mmdit(
+            jax.random.PRNGKey(stable_hash(self.model_id) % 2**31), cfg)
         apply = jax.jit(
             lambda p, lat, t, emb, res: mmdit_apply(p, cfg, lat, t, emb, res)
         )
-        return {"params": params, "apply": apply, "cfg": cfg}
+        uses_cfg = self.family.uses_cfg
 
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        cfg: DiTConfig = model_components["cfg"]
-        params = model_components["params"]
-        for patch in kw.get("_patches", []) or []:
-            lora_params = patch.load()["lora"]
-            params = fold_lora(params, lora_params)
-        lat = kw["latents"]
-        emb = kw["prompt_embeds"]
-        t = jnp.full((lat.shape[0],), float(kw["t"]))
+        def _forward(p, lat, t, emb, res, guidance):
+            # one-pass CFG fused INSIDE the jit: cond+null stacked on the
+            # batch axis, so the whole step is a single host->device call
+            if uses_cfg:
+                return fused_cfg_velocity(
+                    lambda pp, l, tt, e, r: mmdit_apply(pp, cfg, l, tt, e, r),
+                    p, lat, t, emb, guidance, res)
+            return mmdit_apply(p, cfg, lat, t, emb, res)
+
+        return {"params": params, "apply": apply,
+                "forward": jax.jit(_forward), "cfg": cfg}
+
+    def fold_patches(
+        self,
+        components: Dict[str, Any],
+        patches: List[Model],
+        patch_components: List[Dict[str, Any]],
+    ) -> Dict[str, Any]:
+        """LoRA fold, done ONCE per (model, patch set) by the backend."""
+        params = components["params"]
+        for pc in patch_components:
+            params = fold_lora(params, pc["lora"])
+        return {**components, "params": params}
+
+    def _velocity(
+        self,
+        model_components: Dict[str, Any],
+        params: Dict[str, Any],
+        lat: jnp.ndarray,
+        t: jnp.ndarray,
+        emb: jnp.ndarray,
+        res: jnp.ndarray,
+        guidance: Any,
+    ) -> jnp.ndarray:
+        forward = model_components.get("forward")
+        g = jnp.asarray(np.broadcast_to(
+            np.asarray(guidance, np.float32), (lat.shape[0],)))
+        if forward is not None:
+            return forward(params, lat, t, emb, res, g)
+        # components loaded elsewhere: python-side one-pass CFG fallback
+        apply = model_components["apply"]
+        if self.family.uses_cfg:
+            return fused_cfg_velocity(apply, params, lat, t, emb, g, res)
+        return apply(params, lat, t, emb, res)
+
+    def _materialize_residuals(self, cfg: DiTConfig, kw: Dict[str, Any],
+                               lat: jnp.ndarray) -> jnp.ndarray:
         res = kw.get("controlnet_residuals")
         if res is None:
             res = jnp.zeros(
                 (cfg.n_layers, lat.shape[0], cfg.image_tokens, cfg.d_model),
                 lat.dtype,
             )
-        apply = model_components["apply"]
-        v_c = apply(params, lat, t, emb, res)
-        if self.family.uses_cfg:
-            null_emb = jnp.zeros_like(emb)
-            v_u = apply(params, lat, t, null_emb, res)
-            v = cfg_combine(v_u, v_c, float(kw.get("guidance", 4.5)))
-        else:
-            v = v_c
+        return res
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        cfg: DiTConfig = model_components["cfg"]
+        params = model_components["params"]
+        for patch in kw.get("_patches", []) or []:
+            # legacy direct-call path; the serving runtime folds via the
+            # backend's (model_id, patch_ids) cache instead
+            lora_params = patch.load()["lora"]
+            params = fold_lora(params, lora_params)
+        lat = kw["latents"]
+        emb = kw["prompt_embeds"]
+        t = jnp.full((lat.shape[0],), float(kw["t"]))
+        res = self._materialize_residuals(cfg, kw, lat)
+        v = self._velocity(model_components, params, lat, t, emb, res,
+                           float(kw.get("guidance", 4.5)))
         return {"velocity": v}
+
+    def execute_batch(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        """Stacked cross-request forward.  Batch axis is axis 0 for
+        latents/embeddings but axis 1 for the layer-major ControlNet
+        residual stacks; timesteps and guidance become per-item vectors."""
+        cfg: DiTConfig = model_components["cfg"]
+        params = model_components["params"]
+        patch_sets = [tuple(p.model_id for p in kw.get("_patches", []) or [])
+                      for kw in batch_kwargs]
+        if any(ps != patch_sets[0] for ps in patch_sets[1:]):
+            # mixed patch sets can't share one folded parameter set
+            # (the serving runtime never batches them — batch_key includes
+            # effective_patches — but direct callers might)
+            return self._execute_sequential(model_components, batch_kwargs)
+        for patch in batch_kwargs[0].get("_patches", []) or []:
+            params = fold_lora(params, patch.load()["lora"])
+        lats = [kw["latents"] for kw in batch_kwargs]
+        embs = [kw["prompt_embeds"] for kw in batch_kwargs]
+        if (any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:])
+                or any(e.shape[1:] != embs[0].shape[1:] for e in embs[1:])):
+            return self._execute_sequential(model_components, batch_kwargs)
+        sizes = [int(l.shape[0]) for l in lats]
+        lat = jnp.concatenate(lats, axis=0)
+        emb = jnp.concatenate(embs, axis=0)
+        # per-item scalars become [B] vectors; built host-side in ONE
+        # transfer instead of B tiny device ops
+        t = jnp.asarray(np.repeat(
+            np.asarray([float(kw["t"]) for kw in batch_kwargs], np.float32),
+            sizes))
+        res = jnp.concatenate([
+            self._materialize_residuals(cfg, kw, l)
+            for kw, l in zip(batch_kwargs, lats)
+        ], axis=1)
+        guidance = np.repeat(
+            np.asarray([float(kw.get("guidance", 4.5))
+                        for kw in batch_kwargs], np.float32), sizes)
+        v = self._velocity(model_components, params, lat, t, emb, res, guidance)
+        return [{"velocity": chunk} for chunk in _split_rows(v, sizes)]
 
     def cost(self) -> ModelCost:
         f = self.family
@@ -181,7 +304,7 @@ class ControlNet(Model):
     def load(self, device: Any = None) -> Dict[str, Any]:
         cfg = self.family.toy
         params = init_controlnet(
-            jax.random.PRNGKey(hash(self.model_id) % 2**31), cfg
+            jax.random.PRNGKey(stable_hash(self.model_id) % 2**31), cfg
         )
         apply = jax.jit(
             lambda p, lat, cond, t, emb: controlnet_apply(p, cfg, lat, cond, t, emb)
@@ -196,6 +319,25 @@ class ControlNet(Model):
             kw["prompt_embeds"],
         )
         return {"controlnet_residuals": res}
+
+    def execute_batch(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        lats = [kw["latents"] for kw in batch_kwargs]
+        if any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:]):
+            return self._execute_sequential(model_components, batch_kwargs)
+        sizes = [int(l.shape[0]) for l in lats]
+        lat = jnp.concatenate(lats, axis=0)
+        cond = jnp.concatenate([kw["cond_latents"] for kw in batch_kwargs], axis=0)
+        emb = jnp.concatenate([kw["prompt_embeds"] for kw in batch_kwargs], axis=0)
+        t = jnp.asarray(np.repeat(
+            np.asarray([float(kw["t"]) for kw in batch_kwargs], np.float32),
+            sizes))
+        res = model_components["apply"](
+            model_components["params"], lat, cond, t, emb)
+        # residuals are layer-major [L, B, Ti, d]: batch axis is axis 1
+        return [{"controlnet_residuals": chunk}
+                for chunk in _split_rows(res, sizes, axis=1)]
 
     def cost(self) -> ModelCost:
         f = self.family
@@ -222,7 +364,7 @@ class VAEDecode(Model):
     def load(self, device: Any = None) -> Dict[str, Any]:
         cfg = self.family.toy
         params = init_vae(
-            jax.random.PRNGKey(hash(f"vae:{self.family.name}") % 2**31),
+            jax.random.PRNGKey(stable_hash(f"vae:{self.family.name}") % 2**31),
             latent_channels=cfg.latent_channels,
         )
         return {
@@ -234,6 +376,17 @@ class VAEDecode(Model):
     def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
         img = model_components["decode"](model_components["params"], kw["latents"])
         return {"image": img}
+
+    def execute_batch(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        lats = [kw["latents"] for kw in batch_kwargs]
+        if any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:]):
+            return self._execute_sequential(model_components, batch_kwargs)
+        sizes = [int(l.shape[0]) for l in lats]
+        img = model_components["decode"](
+            model_components["params"], jnp.concatenate(lats, axis=0))
+        return [{"image": chunk} for chunk in _split_rows(img, sizes)]
 
     def cost(self) -> ModelCost:
         f = self.family
@@ -260,13 +413,27 @@ class VAEEncode(Model):
     def load(self, device: Any = None) -> Dict[str, Any]:
         return VAEDecode(self.family).load(device)
 
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        img = kw["image"]
+    def _as_array(self, img: Any) -> jnp.ndarray:
         if not hasattr(img, "shape"):   # toy stand-in for a PIL image
             cfg = self.family.toy
             img = jnp.zeros((1, cfg.latent_size * 8, cfg.latent_size * 8, 3))
+        return img
+
+    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
+        img = self._as_array(kw["image"])
         lat = model_components["encode"](model_components["params"], img)
         return {"cond_latents": lat}
+
+    def execute_batch(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        imgs = [self._as_array(kw["image"]) for kw in batch_kwargs]
+        if any(i.shape[1:] != imgs[0].shape[1:] for i in imgs[1:]):
+            return self._execute_sequential(model_components, batch_kwargs)
+        sizes = [int(i.shape[0]) for i in imgs]
+        lat = model_components["encode"](
+            model_components["params"], jnp.concatenate(imgs, axis=0))
+        return [{"cond_latents": chunk} for chunk in _split_rows(lat, sizes)]
 
     def cost(self) -> ModelCost:
         c = VAEDecode(self.family).cost()
@@ -337,7 +504,7 @@ class LoRAAdapter(Model):
         self.add_output("adapter_weights", TensorType())
 
     def load(self, device: Any = None) -> Dict[str, Any]:
-        key = jax.random.PRNGKey(hash(self.model_id) % 2**31)
+        key = jax.random.PRNGKey(stable_hash(self.model_id) % 2**31)
         lora = init_lora(key, self.family.toy, rank=self.rank)
         return {"lora": randomize_lora(key, lora)}
 

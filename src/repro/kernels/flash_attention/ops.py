@@ -3,6 +3,12 @@
 ``mha(q, k, v)`` takes the framework-wide ``[B, S, H, D]`` layout, handles
 GQA head expansion, and dispatches to the kernel (interpret mode on CPU,
 compiled Mosaic on TPU).
+
+The kernel carries a ``custom_vjp``: the forward pass is the Pallas
+kernel, the backward pass recomputes through the pure-jnp reference
+attention (``pallas_call`` has no autodiff rule), so shared call sites —
+e.g. ``gqa_attention``'s flash route, which serving and training both
+hit — stay differentiable.
 """
 
 from __future__ import annotations
@@ -19,6 +25,30 @@ from repro.kernels.flash_attention.ref import attention_ref
 
 def _is_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(qt, kt, vt, causal, window, block_q, block_k):
+    return flash_attention(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=not _is_tpu(),
+    )
+
+
+def _flash_fwd(qt, kt, vt, causal, window, block_q, block_k):
+    return _flash(qt, kt, vt, causal, window, block_q, block_k), (qt, kt, vt)
+
+
+def _flash_bwd(causal, window, block_q, block_k, residuals, g):
+    qt, kt, vt = residuals
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention_ref(q, k, v, causal=causal, window=window),
+        qt, kt, vt,
+    )
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 @functools.partial(
@@ -46,10 +76,7 @@ def mha(
     kt = k.transpose(0, 2, 1, 3).reshape(b * hq, sk, d)
     vt = v.transpose(0, 2, 1, 3).reshape(b * hq, sk, d)
     if use_kernel:
-        out = flash_attention(
-            qt, kt, vt, causal=causal, window=window,
-            block_q=block_q, block_k=block_k, interpret=not _is_tpu(),
-        )
+        out = _flash(qt, kt, vt, causal, window, block_q, block_k)
     else:
         out = attention_ref(qt, kt, vt, causal=causal, window=window)
     return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -39,6 +39,7 @@ from repro.nn.layers import (
     mask_vocab,
     rms_norm,
     rope_frequencies,
+    shard_map_compat,
     split,
     swiglu,
 )
@@ -382,12 +383,11 @@ def _flash_decode_shardmap(shards, q, k, v, ck, cv, pos, window):
         out = (acc / l.transpose(0, 3, 1, 2)[..., None]).reshape(bl, sl_q, hq, hd)
         return out.astype(q.dtype), ck, cv
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local,
         mesh=mesh,
         in_specs=(P(dp), P(dp), P(dp), P(dp, axis), P(dp, axis), P()),
         out_specs=(P(dp), P(dp, axis), P(dp, axis)),
-        check_vma=False,
     )
     return fn(q, k, v, ck, cv, pos)
 

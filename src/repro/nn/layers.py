@@ -9,6 +9,7 @@ them.  No framework dependencies — plain ``jax.numpy`` + ``jax.lax``.
 from __future__ import annotations
 
 import math
+import os
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
@@ -18,6 +19,49 @@ import numpy as np
 
 
 Params = Dict[str, Any]
+
+
+# ------------------------------------------------- flash-attention routing
+#
+# The non-causal, mask-free attention path (the MMDiT joint text+image
+# hot path, the text encoder) routes through the Pallas flash-attention
+# kernel (repro.kernels.flash_attention) — interpret mode on CPU, compiled
+# Mosaic on TPU.  ``REPRO_FLASH_ATTENTION=0`` (or set_flash_attention(False))
+# falls back to the pure-jnp reference path.
+
+_flash_enabled: bool = os.environ.get(
+    "REPRO_FLASH_ATTENTION", "1").lower() not in ("0", "false", "off")
+
+
+def set_flash_attention(enabled: bool) -> bool:
+    """Toggle the Pallas flash-attention route; returns the previous value.
+
+    The flag is read at TRACE time: ``jax.jit``-compiled functions keep
+    whichever route was active when they were first traced.  Toggle before
+    loading models (or load fresh components afterwards) for it to take
+    effect on their jitted applies.
+    """
+    global _flash_enabled
+    prev = _flash_enabled
+    _flash_enabled = bool(enabled)
+    return prev
+
+
+def flash_attention_enabled() -> bool:
+    return _flash_enabled
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across JAX versions: top-level with ``check_vma``
+    on current releases, ``jax.experimental.shard_map`` with ``check_rep``
+    on older ones (e.g. 0.4.x, which has no ``jax.shard_map`` at all)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 # ---------------------------------------------------------------- init utils
@@ -221,6 +265,15 @@ def gqa_attention(
     assert hq % hkv == 0, (hq, hkv)
     group = hq // hkv
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    # non-causal, mask-free joint-sequence attention (the MMDiT hot path):
+    # Pallas flash-attention kernel, unless the config flag routes the
+    # reference path.  Long sequences keep the dedicated blockwise paths.
+    if (_flash_enabled and not causal and window is None and mask is None
+            and q_offset == 0 and softmax_scale is None and sq == sk
+            and sq <= 8192):
+        from repro.kernels.flash_attention.ops import mha
+
+        return mha(q, k, v, causal=False)
     # decode against a long cache: grouped blockwise path (never
     # materializes the repeated-KV or the f32 full cache)
     if mask is not None and sk > 8192 and sq <= 128:
