@@ -12,7 +12,8 @@ from repro.core.admission import AdmissionController, critical_path_seconds
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScaleAction
 from repro.core.compiler import CompiledGraph, CompileError, GraphCompiler, Pass
 from repro.core.datastore import DataEngine, FetchFuture
-from repro.core.executor import Executor, LocalBackend, OutOfMemory
+from repro.core.executor import Executor, LocalBackend, OutOfMemory, ShardedBackend
+from repro.core.mesh import MeshManager, sharded_exec_enabled
 from repro.core.model import Model, ModelCost
 from repro.core.passes import (
     ApproximateCachingPass,

@@ -271,28 +271,28 @@ class LocalBackend:
 
     def execute(self, model: Model, **kwargs: Any) -> Tuple[Dict[str, Any], float]:
         patches = kwargs.pop("_patches", None) or []
-        comps, _ = self.components_for(model, patches)
+        comps, load_dt = self.components_for(model, patches)
         t0 = _time.perf_counter()
         out = model.execute(comps, **kwargs)
         self._block(out)
         dt = _time.perf_counter() - t0
         self.forward_log.append((model.model_id, 1))
-        self.exec_seconds += dt
+        # exec_seconds covers load folds + executes (same contract as
+        # execute_batch); the returned dt stays forward-only
+        self.exec_seconds += load_dt + dt
         return out, dt
 
-    def execute_batch(
-        self,
-        model: Model,
-        batch_kwargs: List[Dict[str, Any]],
-        patches: Sequence[Model] = (),
-    ) -> Tuple[List[Dict[str, Any]], float, float]:
-        """One stacked forward for a whole ScheduledBatch.  Returns
-        (per-request outputs, load seconds, execute seconds).
+    @staticmethod
+    def _lift_patches(
+        batch_kwargs: List[Dict[str, Any]], patches: Sequence[Model]
+    ) -> Tuple[Sequence[Model], List[Dict[str, Any]], bool]:
+        """Normalize patch routing for a stacked forward.
 
         Patches may arrive either via ``patches`` (the serving runtime) or
         as a uniform per-request ``_patches`` kwarg (direct callers); a
         mixed per-request set is passed through so the model's own
-        fallback can fold per item."""
+        fallback can fold per item.  Returns (patches, cleaned kwargs,
+        uniform?)."""
         per_item = [kw.get("_patches") or [] for kw in batch_kwargs]
         ids = [tuple(p.model_id for p in ps) for ps in per_item]
         uniform = all(i == ids[0] for i in ids[1:])
@@ -303,6 +303,17 @@ class LocalBackend:
                      for kw in batch_kwargs]
         else:
             clean = [dict(kw) for kw in batch_kwargs]
+        return patches, clean, uniform
+
+    def execute_batch(
+        self,
+        model: Model,
+        batch_kwargs: List[Dict[str, Any]],
+        patches: Sequence[Model] = (),
+    ) -> Tuple[List[Dict[str, Any]], float, float]:
+        """One stacked forward for a whole ScheduledBatch.  Returns
+        (per-request outputs, load seconds, execute seconds)."""
+        patches, clean, _ = self._lift_patches(batch_kwargs, patches)
         comps, load_dt = self.components_for(model, patches)
         model._batch_was_stacked = True
         t0 = _time.perf_counter()
@@ -314,5 +325,111 @@ class LocalBackend:
         else:   # model fell back to per-request execution: log what ran
             self.forward_log.extend(
                 (model.model_id, 1) for _ in batch_kwargs)
+        self.exec_seconds += load_dt + exec_dt
+        return outs, load_dt, exec_dt
+
+
+class ShardedBackend(LocalBackend):
+    """Multi-device backend: materializes a :class:`ScheduledBatch`'s
+    parallelism degree ``k`` as a real SPMD forward on a k-device submesh.
+
+    The coordinator passes the submesh assembled from the batch's
+    executors; this backend replicates the (LoRA-folded) parameters across
+    it — one host->HBM stream per device set, cached per
+    ``(model_id, patch_ids, devices)`` — and hands the stacked batch to
+    :meth:`Model.execute_batch_sharded`.  Models that decline (indivisible
+    shapes, no sharded path) fall back to the inherited single-device
+    stacked forward, so a 1-device host or ``REPRO_SHARDED_EXEC=0``
+    behaves exactly like :class:`LocalBackend`.
+
+    Outputs are gathered back to the home device (the coordinator's data
+    plane is single-device): this is the per-batch scatter/gather the
+    paper's latent parallelism describes, and it keeps downstream
+    single-device forwards from mixing committed device sets.
+    """
+
+    def __init__(self, mesh_manager: Optional[Any] = None) -> None:
+        super().__init__()
+        from repro.core.mesh import MeshManager, sharded_exec_enabled
+
+        self.mesh_manager = mesh_manager or MeshManager()
+        self.enabled = (sharded_exec_enabled()
+                        and self.mesh_manager.n_devices > 1)
+        # (model_id, patch_ids, device_ids) -> mesh-replicated components
+        self._replicated: Dict[Tuple, Dict[str, Any]] = {}
+        # (model_id, batch_size, k, device_ids) per sharded forward
+        self.shard_log: List[Tuple[str, int, int, Tuple]] = []
+
+    # ------------------------------------------------------------ placement
+    @staticmethod
+    def _device_key(mesh: Any) -> Tuple:
+        return tuple(d.id for d in mesh.devices.flat)
+
+    def replicated_components(
+        self, model: Model, patches: Sequence[Model], mesh: Any
+    ) -> Tuple[Dict[str, Any], float]:
+        """Components with array leaves replicated across ``mesh`` (cached
+        per placement).  Returns (components, measured load seconds)."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        comps, load_dt = self.components_for(model, patches)
+        key = (model.model_id, tuple(p.model_id for p in patches),
+               self._device_key(mesh))
+        if key in self._replicated:
+            return self._replicated[key], load_dt
+        repl = NamedSharding(mesh, P())
+        t0 = _time.perf_counter()
+        out = jax.tree.map(
+            lambda x: jax.device_put(x, repl)
+            if isinstance(x, jax.Array) else x, comps)
+        jax.block_until_ready([x for x in jax.tree.leaves(out)
+                               if isinstance(x, jax.Array)])
+        load_dt += _time.perf_counter() - t0
+        self._replicated[key] = out
+        return out, load_dt
+
+    def unload(self, model_id: str) -> None:
+        super().unload(model_id)
+        self._replicated = {
+            k: v for k, v in self._replicated.items()
+            if k[0] != model_id and model_id not in k[1]
+        }
+
+    # ------------------------------------------------------------ execution
+    def execute_batch(
+        self,
+        model: Model,
+        batch_kwargs: List[Dict[str, Any]],
+        patches: Sequence[Model] = (),
+        mesh: Optional[Any] = None,
+    ) -> Tuple[List[Dict[str, Any]], float, float]:
+        """Sharded stacked forward when ``mesh`` spans >1 device, else the
+        inherited single-device path."""
+        if (mesh is None or not self.enabled
+                or getattr(mesh, "size", 1) <= 1):
+            return super().execute_batch(model, batch_kwargs, patches)
+        lifted, clean, uniform = self._lift_patches(batch_kwargs, patches)
+        if not uniform:
+            # mixed per-request patch sets cannot share replicated params
+            return super().execute_batch(model, batch_kwargs, patches)
+        comps, load_dt = self.replicated_components(model, lifted, mesh)
+        t0 = _time.perf_counter()
+        outs = model.execute_batch_sharded(comps, clean, mesh)
+        if outs is None:       # model declined: single-device fallback
+            return super().execute_batch(model, batch_kwargs, patches)
+        import jax
+
+        home = self.mesh_manager.devices[0]
+        outs = [
+            {k: (jax.device_put(v, home) if isinstance(v, jax.Array) else v)
+             for k, v in out.items()}
+            for out in outs
+        ]
+        self._block(outs)
+        exec_dt = _time.perf_counter() - t0
+        self.forward_log.append((model.model_id, len(batch_kwargs)))
+        self.shard_log.append((model.model_id, len(batch_kwargs),
+                               mesh.size, self._device_key(mesh)))
         self.exec_seconds += load_dt + exec_dt
         return outs, load_dt, exec_dt

@@ -1,0 +1,117 @@
+"""Device-mesh management — the physical substrate of adaptive model
+parallelism (§5.2, made real).
+
+The scheduler picks a parallelism degree ``k`` per :class:`ScheduledBatch`;
+until now that degree only shaped analytic durations.  The
+:class:`MeshManager` is the missing bridge: it partitions the process's
+``jax.devices()`` into per-executor slices (executor *i* owns device
+``i mod n_devices`` — one accelerator per executor, wrapping when the
+fleet is larger than the host, e.g. CPU simulation) and assembles
+**k-executor submeshes** on demand, so a batch scheduled at parallelism
+``k`` really runs as one SPMD program over the k owning devices.
+
+Submeshes are single-axis (``axis="exec"``) and cached by device tuple;
+the same axis carries both sharding modes the executable plane uses:
+
+* **data/CFG-branch parallel** — batch rows sharded across the axis
+  (latent parallelism: with CFG folded onto the batch axis, k=2 puts the
+  conditional and unconditional branches on different devices);
+* **sequence parallel** — image tokens sharded across the axis with
+  per-layer K/V all-gathers (see ``mmdit_apply_seq_sharded``).
+
+``REPRO_SHARDED_EXEC=0`` disables sharded execution globally; a 1-device
+host degrades to the single-device path automatically (every submesh
+clamps to size 1), which is what keeps CPU-only CI green.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+def sharded_exec_enabled() -> bool:
+    """Global gate for multi-device execution (``REPRO_SHARDED_EXEC``)."""
+    return os.environ.get("REPRO_SHARDED_EXEC", "1").lower() not in (
+        "0", "false", "off")
+
+
+class MeshManager:
+    """Partitions the host's devices into per-executor slices and builds
+    k-device submeshes for scheduled batches.
+
+    ``devices`` defaults to ``jax.devices()``; tests may pass any list of
+    hashable sentinels to exercise the pure assignment/clamping logic
+    without a multi-device runtime (only :meth:`submesh` needs real JAX
+    devices).
+    """
+
+    def __init__(self, devices: Optional[Sequence[Any]] = None,
+                 axis: str = "exec") -> None:
+        if devices is None:
+            import jax
+
+            devices = jax.devices()
+        if not devices:
+            raise ValueError("MeshManager needs at least one device")
+        self.devices: List[Any] = list(devices)
+        self.axis = axis
+        self._submeshes: Dict[Tuple[int, ...], Any] = {}
+
+    # ------------------------------------------------------------ assignment
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def device_of(self, executor_id: int) -> Any:
+        """The device slice owned by an executor (wraps when the fleet is
+        larger than the host — those executors timeshare a device)."""
+        return self.devices[executor_id % len(self.devices)]
+
+    def devices_of(self, executor_ids: Sequence[int]) -> List[Any]:
+        """Ordered distinct devices backing ``executor_ids`` (the first
+        executor's device leads, matching the batch's lead executor)."""
+        out: List[Any] = []
+        seen = set()
+        for eid in executor_ids:
+            d = self.device_of(eid)
+            key = id(d)
+            if key not in seen:
+                seen.add(key)
+                out.append(d)
+        return out
+
+    # -------------------------------------------------------------- clamping
+    def max_k(self) -> int:
+        """Fleet-wide ceiling: the largest submesh ANY executor set can
+        form (1 when sharded execution is globally disabled)."""
+        if not sharded_exec_enabled():
+            return 1
+        return len({id(d) for d in self.devices})
+
+    def assemblable(self, executor_ids: Sequence[int]) -> int:
+        """Largest submesh size buildable from these executors: the number
+        of distinct devices they own."""
+        return len(self.devices_of(executor_ids))
+
+    def clamp(self, k: int, executor_ids: Sequence[int]) -> int:
+        """Clamp a chosen parallelism degree to what can be materialized."""
+        if not sharded_exec_enabled():
+            return 1
+        return max(1, min(k, self.assemblable(executor_ids)))
+
+    # -------------------------------------------------------------- submesh
+    def submesh(self, executor_ids: Sequence[int]) -> Any:
+        """A 1-D ``jax.sharding.Mesh`` over the executors' distinct devices
+        (cached per device tuple)."""
+        import numpy as np
+        from jax.sharding import Mesh
+
+        devs = self.devices_of(executor_ids)
+        key = tuple(d.id if hasattr(d, "id") else id(d) for d in devs)
+        if key not in self._submeshes:
+            self._submeshes[key] = Mesh(np.array(devs), (self.axis,))
+        return self._submeshes[key]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<MeshManager {len(self.devices)} devices axis={self.axis!r}>"

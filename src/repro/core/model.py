@@ -220,6 +220,28 @@ class Model(abc.ABC):
         self._batch_was_stacked = False
         return [self.execute(model_components, **kw) for kw in batch_kwargs]
 
+    # ------------------------------------------------- sharded execution
+    def execute_batch_sharded(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        mesh: Any,
+    ) -> Optional[List[Dict[str, Any]]]:
+        """Run one stacked forward as an SPMD program over ``mesh`` (§5.2).
+
+        Called by :class:`~repro.core.executor.ShardedBackend` when a
+        :class:`ScheduledBatch` carries parallelism k>1; ``mesh`` is the
+        k-device submesh assembled from the batch's executors, and
+        ``model_components`` arrive with array leaves already replicated
+        across it.  Implementations shard the stacked batch (or the token
+        sequence) over the mesh axis and return per-request outputs, or
+        ``None`` when this batch cannot be sharded soundly (indivisible
+        shapes, unsupported signature) — the backend then falls back to the
+        single-device stacked forward.  The base class knows nothing about
+        any model's internal parallel structure, so it always declines.
+        """
+        return None
+
     @staticmethod
     def _literals_equal(a: Any, b: Any) -> bool:
         if a is b:

@@ -88,8 +88,9 @@ class ServingSystem:
         self.coordinator = Coordinator(
             executors,
             self.profiles,
-            scheduler=scheduler or Scheduler(
-                self.profiles, use_declared_max_batch=backend is not None),
+            # None -> the Coordinator builds the backend-aware default
+            # (declared B_max + the sharded backend's mesh)
+            scheduler=scheduler,
             admission=AdmissionController(self.profiles, enabled=admission_enabled),
             backend=backend,
             autoscaler=asc,

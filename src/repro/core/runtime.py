@@ -37,6 +37,7 @@ from repro.core.executor import (
     WARMING,
     Executor,
     LocalBackend,
+    ShardedBackend,
 )
 from repro.core.profiles import ProfileStore
 from repro.core.scheduler import ScheduledBatch, Scheduler
@@ -183,9 +184,12 @@ class Coordinator:
         self.by_id = {e.id: e for e in executors}
         self.profiles = profiles
         # executable plane defaults to the declared B_max (real stacked
-        # forwards are measured, so the architectural cap governs)
+        # forwards are measured, so the architectural cap governs); a
+        # sharded backend also hands its MeshManager to the scheduler so
+        # chosen k never exceeds an assemblable submesh
         self.scheduler = scheduler or Scheduler(
-            profiles, use_declared_max_batch=backend is not None)
+            profiles, use_declared_max_batch=backend is not None,
+            mesh=getattr(backend, "mesh_manager", None))
         self.admission = admission or AdmissionController(profiles, enabled=False)
         self.backend = backend
         self.autoscaler = autoscaler
@@ -549,6 +553,15 @@ class Coordinator:
         stacked forwards over the same cached components.
         """
         total = 0.0
+        # sharded plane: a batch scheduled at k>1 executes on the submesh
+        # formed by its executors' devices — the reservation made at
+        # dispatch (all k executors occupied for the measured duration) is
+        # what guarantees those devices stay exclusively ours until the
+        # batch completes
+        submesh = None
+        if (batch.parallelism > 1 and isinstance(self.backend, ShardedBackend)
+                and self.backend.enabled):
+            submesh = self.backend.mesh_manager.submesh(batch.executor_ids)
         groups: Dict[type, List[RequestNode]] = {}
         for rn in batch.nodes:
             groups.setdefault(type(rn.node.op), []).append(rn)
@@ -566,8 +579,12 @@ class Coordinator:
                     else:
                         kwargs[name] = v
                 batch_kwargs.append(kwargs)
-            outs, load_dt, exec_dt = self.backend.execute_batch(
-                op, batch_kwargs, patches=patches)
+            if submesh is not None:
+                outs, load_dt, exec_dt = self.backend.execute_batch(
+                    op, batch_kwargs, patches=patches, mesh=submesh)
+            else:
+                outs, load_dt, exec_dt = self.backend.execute_batch(
+                    op, batch_kwargs, patches=patches)
             for rn, out in zip(rns, outs):
                 rn.request.output_values[rn.uid] = out
             total += load_dt + exec_dt

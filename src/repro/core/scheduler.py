@@ -56,12 +56,17 @@ class Scheduler:
         max_parallelism_cap: Optional[int] = None,
         max_batch_cap: Optional[int] = None,
         use_declared_max_batch: bool = False,
+        mesh: Optional[Any] = None,
     ) -> None:
         self.profiles = profiles
         self.adaptive_parallelism = adaptive_parallelism
         self.enable_sharing = enable_sharing
         self.fixed_parallelism = fixed_parallelism
         self.max_parallelism_cap = max_parallelism_cap
+        # MeshManager (sharded executable plane): k is clamped to the
+        # largest submesh the available executors' devices can form, and
+        # placement prefers executors on distinct devices
+        self.mesh = mesh
         # cap on cross-request batch size (ablation/benchmark knob;
         # max_batch_cap=1 forces per-request sequential dispatch)
         self.max_batch_cap = max_batch_cap
@@ -105,15 +110,29 @@ class Scheduler:
 
     # --------------------------------------------------------- parallelism
     def choose_parallelism(self, model_id: str, n_avail: int,
-                           n_queued: int = 0, low_load: bool = True) -> int:
+                           n_queued: int = 0, low_load: bool = True,
+                           avail_ids: Optional[Sequence[int]] = None) -> int:
         profile = self.profiles.get(model_id)
         k_max = profile.max_parallelism
         if self.max_parallelism_cap is not None:
             k_max = min(k_max, self.max_parallelism_cap)
+        if self.mesh is not None:
+            # sharded plane: k beyond an assemblable submesh would dispatch
+            # a parallel batch that cannot actually shard — clamp to the
+            # fleet-wide device ceiling here so the decision reflects real
+            # placement (§5.2)
+            k_max = min(k_max, self.mesh.max_k())
         if self.fixed_parallelism is not None:
+            # static parallelism clamps to the FLEET ceiling only: when
+            # fewer than k executors are free it must keep waiting for a
+            # free device group (Fig 4), not degrade to what is free now
             return max(1, min(self.fixed_parallelism, k_max))
         if not self.adaptive_parallelism:
             return 1
+        if self.mesh is not None and avail_ids is not None:
+            # adaptive (work-conserving) parallelism is free to use
+            # whatever submesh the currently-free executors can form
+            k_max = min(k_max, max(1, self.mesh.assemblable(avail_ids)))
         # work-conserving AND throughput-preserving: intra-node parallelism
         # trades 2 GPUs for ~1.9x latency — a win only when the cluster has
         # genuine spare capacity (inflight < fleet) and no batch would
@@ -153,7 +172,27 @@ class Scheduler:
         # model first, so scaled-up groups absorb their model's traffic
         scored.sort(key=lambda s: (
             s[0], 0 if model_id in s[4].assigned_models else 1, s[4].id))
-        top = scored[:k]
+        if self.mesh is not None and k > 1:
+            # the k executors must own k distinct devices or the submesh
+            # collapses: greedily take the best-scoring executor per device
+            top, seen = [], set()
+            for s in scored:
+                dev = id(self.mesh.device_of(s[4].id))
+                if dev in seen:
+                    continue
+                seen.add(dev)
+                top.append(s)
+                if len(top) == k:
+                    break
+            if len(top) < k:
+                # adaptive k is clamped to assemblable and the fixed path
+                # waits for a device group, so only a mid-cycle change of
+                # the avail set lands here; fill by score as a best effort
+                chosen = {id(s) for s in top}
+                top += [s for s in scored
+                        if id(s) not in chosen][:k - len(top)]
+        else:
+            top = scored[:k]
         lead = top[0]
         return (
             [s[4] for s in top],
@@ -183,11 +222,18 @@ class Scheduler:
             batch = self.form_batch(head, ready)
             k = self.choose_parallelism(head.model_id, len(avail),
                                         n_queued=len(ready) - len(batch),
-                                        low_load=low_load)
+                                        low_load=low_load,
+                                        avail_ids=[e.id for e in avail])
             if (self.fixed_parallelism is not None
                     and self.profiles.get(head.model_id).max_parallelism > 1
-                    and k > len(avail)):
-                break  # static parallelism waits for a free GPU pair (Fig 4)
+                    and (k > len(avail)
+                         or (self.mesh is not None and k > 1
+                             and self.mesh.assemblable(
+                                 [e.id for e in avail]) < k))):
+                # static parallelism waits for a free device group (Fig 4):
+                # not enough free executors, or the free ones share devices
+                # and cannot assemble a k-wide submesh
+                break
             targets, l_data, l_load, l_infer, swap = self.score_executors(
                 batch, avail, k, data_fetch_cost
             )

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 from repro.diffusion.config import DiTConfig
 from repro.nn.layers import (
     dense_init,
+    flash_attention_enabled,
     gqa_attention,
     modulate,
     rms_norm,
+    shard_map_compat,
     split,
     timestep_embedding,
 )
@@ -177,6 +179,116 @@ def mmdit_apply(
     x = modulate(rms_norm(x, params["final_norm"]), shift, scale)
     out = x @ params["final_proj"]
     return unpatchify(out, cfg.patch, cfg.latent_size, cfg.latent_channels)
+
+
+# ------------------------------------------------- sequence-sharded backbone
+
+def _mmdit_block_seq(
+    p: Params,
+    x: jax.Array,            # LOCAL image tokens [B, Ti/k, d]
+    c: jax.Array,            # replicated text tokens [B, Tc, d]
+    t_emb: jax.Array,
+    n_heads: int,
+    axis: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """One MMDiT block under sequence sharding: each device holds a
+    contiguous slice of the image tokens; joint attention stays exact by
+    all-gathering the image K/V (one tiled collective per stream per
+    layer), after which local queries — text plus the local image slice —
+    run through the same attention route as the unsharded block (the
+    Pallas flash kernel handles the rectangular local-q × global-kv
+    shape).  The text stream sees only replicated/gathered operands, so it
+    stays bitwise-replicated across the mesh without a second collective.
+    """
+    qi, ki, vi, mods_i = _stream_qkv(p["img"], x, t_emb, n_heads)
+    qt, kt, vt, mods_t = _stream_qkv(p["txt"], c, t_emb, n_heads)
+    ki = jax.lax.all_gather(ki, axis, axis=1, tiled=True)
+    vi = jax.lax.all_gather(vi, axis, axis=1, tiled=True)
+    q = jnp.concatenate([qt, qi], axis=1)          # [B, Tc + Ti/k, H, hd]
+    k = jnp.concatenate([kt, ki], axis=1)          # [B, Tc + Ti,   H, hd]
+    v = jnp.concatenate([vt, vi], axis=1)
+    if flash_attention_enabled():
+        # the Pallas kernel's padding-guarded k-sweep handles the
+        # rectangular local-q x global-kv shape natively, so the sharded
+        # path keeps the same flash hot path as the unsharded block
+        from repro.kernels.flash_attention.ops import mha
+
+        out = mha(q, k, v, causal=False)
+    else:
+        out = gqa_attention(q, k, v, causal=False)
+    tc = c.shape[1]
+    out_t, out_i = out[:, :tc], out[:, tc:]
+    x = _stream_post(p["img"], x, out_i, mods_i, n_heads)
+    c = _stream_post(p["txt"], c, out_t, mods_t, n_heads)
+    return x, c
+
+
+def seq_shard_divisor(cfg: DiTConfig, k: int) -> bool:
+    """Can the latent's patch-row grid split evenly across k devices?"""
+    return (cfg.latent_size // cfg.patch) % k == 0
+
+
+def mmdit_apply_seq_sharded(
+    params: Params,
+    cfg: DiTConfig,
+    latents: jax.Array,                       # [B, S, S, C]
+    t: jax.Array,                             # [B]
+    text_emb: jax.Array,                      # [B, Tc, text_dim]
+    control_residuals: Optional[jax.Array],   # [L, B, Ti, d] (padded)
+    mesh: Any,
+) -> jax.Array:
+    """Sequence-sharded denoising forward on a device mesh (§5.2).
+
+    The latent's spatial rows (equivalently, contiguous image-token
+    chunks — patchify is row-major over the patch grid) are sharded
+    across the mesh axis; parameters, timesteps and text embeddings are
+    replicated.  Per layer the image K/V are all-gathered so attention is
+    exact; everything else is token-local.  Composes with batches of ANY
+    size — the path adaptive parallelism needs when a batch has fewer
+    rows than the submesh has devices (e.g. one CFG pair on k=4).
+    """
+    axis = mesh.axis_names[0]
+    if control_residuals is None:
+        b = latents.shape[0]
+        control_residuals = jnp.zeros(
+            (cfg.n_layers, b, cfg.image_tokens, cfg.d_model), latents.dtype)
+
+    def shard_fn(params, lat, t, emb, res):
+        # same embedding as the unsharded forward; patchify sees only this
+        # shard's latent rows, so x holds the local token slice
+        x, c, t_emb = _embed_inputs(params, cfg, lat, t, emb)
+
+        def body(carry, xs):
+            x, c = carry
+            layer_p, r = xs
+            x, c = _mmdit_block_seq(layer_p, x, c, t_emb, cfg.n_heads, axis)
+            x = x + r
+            return (x, c), None
+
+        (x, c), _ = jax.lax.scan(body, (x, c),
+                                 (params["layers"], res))
+        ada = jax.nn.silu(t_emb) @ params["final_ada"] + params["final_ada_b"]
+        shift, scale = jnp.split(ada, 2, axis=-1)
+        x = modulate(rms_norm(x, params["final_norm"]), shift, scale)
+        out = x @ params["final_proj"]
+        # local unpatchify: this shard's token rows -> its latent rows
+        b = out.shape[0]
+        g = cfg.latent_size // cfg.patch              # global patch columns
+        rows = out.shape[1] // g                      # local patch rows
+        o = out.reshape(b, rows, g, cfg.patch, cfg.patch, cfg.latent_channels)
+        o = o.transpose(0, 1, 3, 2, 4, 5)
+        return o.reshape(b, rows * cfg.patch, cfg.latent_size,
+                         cfg.latent_channels)
+
+    from jax.sharding import PartitionSpec as P
+
+    fn = shard_map_compat(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(), P(None, axis), P(), P(), P(None, None, axis)),
+        out_specs=P(None, axis),
+    )
+    return fn(params, latents, t, text_emb, control_residuals)
 
 
 # -------------------------------------------------------------- ControlNet

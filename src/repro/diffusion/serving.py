@@ -9,16 +9,18 @@ JAX implementation (for the executable plane).  One code path, two scales.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.model import Model, ModelCost
 from repro.core.types import Image, TensorType
 from repro.core.workflow import WorkflowTemplate, compose
 from repro.diffusion.config import DiffusionFamily, DiTConfig, FAMILIES
+from repro.nn.layers import shard_map_compat
 from repro.diffusion.encoders import (
     init_text_encoder,
     init_vae,
@@ -30,8 +32,16 @@ from repro.diffusion.encoders import (
     vae_encode,
 )
 from repro.diffusion.lora import fold_lora, init_lora, randomize_lora
-from repro.diffusion.mmdit import controlnet_apply, init_controlnet, init_mmdit, mmdit_apply
+from repro.diffusion.mmdit import (
+    controlnet_apply,
+    init_controlnet,
+    init_mmdit,
+    mmdit_apply,
+    mmdit_apply_seq_sharded,
+    seq_shard_divisor,
+)
 from repro.diffusion.sampler import (
+    cfg_combine,
     denoise_step,
     flow_schedule,
     fused_cfg_velocity,
@@ -48,6 +58,24 @@ def _split_rows(val: jnp.ndarray, sizes: List[int], axis: int = 0) -> List[jnp.n
         out.append(val[idx])
         off += n
     return out
+
+
+def _mesh_put(x: jnp.ndarray, mesh: Any, *spec: Any) -> jnp.ndarray:
+    """Explicitly place an array on a submesh with the given PartitionSpec
+    (device_put reshards committed single-device arrays, so stacked inputs
+    built on the home device move onto the submesh in one transfer)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.device_put(x, NamedSharding(mesh, P(*spec)))
+
+
+def _mesh_fn_cache(model_components: Dict[str, Any]) -> Dict[Any, Any]:
+    """Per-components cache of jitted shard_map forwards, keyed by
+    (mode, mesh).  Components are themselves cached per (model, patches,
+    device set) by the backend, so entries live exactly as long as their
+    placement does."""
+    return model_components.setdefault("_sharded_fns", {})
 
 
 # --------------------------------------------------------------------------
@@ -251,11 +279,23 @@ class DiffusionBackbone(Model):
             return self._execute_sequential(model_components, batch_kwargs)
         for patch in batch_kwargs[0].get("_patches", []) or []:
             params = fold_lora(params, patch.load()["lora"])
+        stacked = self._stack_batch(cfg, batch_kwargs)
+        if stacked is None:
+            return self._execute_sequential(model_components, batch_kwargs)
+        lat, emb, t, res, guidance, sizes = stacked
+        v = self._velocity(model_components, params, lat, t, emb, res, guidance)
+        return [{"velocity": chunk} for chunk in _split_rows(v, sizes)]
+
+    def _stack_batch(
+        self, cfg: DiTConfig, batch_kwargs: List[Dict[str, Any]]
+    ) -> Optional[Tuple]:
+        """Stack a cross-request batch: (lat, emb, t, res, guidance, sizes),
+        or None when shapes disagree and stacking would be unsound."""
         lats = [kw["latents"] for kw in batch_kwargs]
         embs = [kw["prompt_embeds"] for kw in batch_kwargs]
         if (any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:])
                 or any(e.shape[1:] != embs[0].shape[1:] for e in embs[1:])):
-            return self._execute_sequential(model_components, batch_kwargs)
+            return None
         sizes = [int(l.shape[0]) for l in lats]
         lat = jnp.concatenate(lats, axis=0)
         emb = jnp.concatenate(embs, axis=0)
@@ -271,7 +311,87 @@ class DiffusionBackbone(Model):
         guidance = np.repeat(
             np.asarray([float(kw.get("guidance", 4.5))
                         for kw in batch_kwargs], np.float32), sizes)
-        v = self._velocity(model_components, params, lat, t, emb, res, guidance)
+        return lat, emb, t, res, guidance, sizes
+
+    def execute_batch_sharded(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        mesh: Any,
+    ) -> Optional[List[Dict[str, Any]]]:
+        """Stacked forward as one SPMD program over the k-device submesh.
+
+        Two composition modes, chosen by shape:
+
+        * **latent/CFG-branch data parallelism** — the CFG pair is folded
+          onto the batch axis host-side (cond rows then null rows) and the
+          rows are sharded across the mesh: at k=2/B=1 the conditional and
+          unconditional branches run on different devices (the paper's
+          latent parallelism), at larger B whole requests spread out.
+          Per-item guidance stays a [B] vector applied after the gather,
+          so mixed guidance scales remain fusable.
+        * **sequence sharding** — when the row count does not divide by k
+          (e.g. one CFG pair on a k=4 submesh), the image tokens shard
+          instead (``mmdit_apply_seq_sharded``), with per-layer K/V
+          all-gathers keeping joint attention exact.
+
+        Returns None when neither mode fits (the backend falls back to the
+        single-device stacked forward).
+        """
+        import jax
+
+        if any(kw.get("_patches") for kw in batch_kwargs):
+            return None      # backend lifts uniform patches before us
+        cfg: DiTConfig = model_components["cfg"]
+        stacked = self._stack_batch(cfg, batch_kwargs)
+        if stacked is None:
+            return None
+        lat, emb, t, res, guidance, sizes = stacked
+        params = model_components["params"]
+        uses_cfg = self.family.uses_cfg
+        b = int(lat.shape[0])
+        if uses_cfg:     # fold CFG onto the batch axis before sharding
+            lat = jnp.concatenate([lat, lat], axis=0)
+            t = jnp.concatenate([t, t], axis=0)
+            emb = jnp.concatenate([emb, jnp.zeros_like(emb)], axis=0)
+            res = jnp.concatenate([res, res], axis=1)
+        k = mesh.size
+        axis = mesh.axis_names[0]
+        cache = _mesh_fn_cache(model_components)
+        if int(lat.shape[0]) % k == 0:
+            key = ("dp", mesh)
+            if key not in cache:
+                cache[key] = jax.jit(shard_map_compat(
+                    lambda p, l, tt, e, r: mmdit_apply(p, cfg, l, tt, e, r),
+                    mesh=mesh,
+                    in_specs=(P(), P(axis), P(axis), P(axis), P(None, axis)),
+                    out_specs=P(axis),
+                ))
+            v2 = cache[key](params,
+                            _mesh_put(lat, mesh, axis),
+                            _mesh_put(t, mesh, axis),
+                            _mesh_put(emb, mesh, axis),
+                            _mesh_put(res, mesh, None, axis))
+        elif seq_shard_divisor(cfg, k):
+            key = ("seq", mesh)
+            if key not in cache:
+                cache[key] = jax.jit(
+                    lambda p, l, tt, e, r: mmdit_apply_seq_sharded(
+                        p, cfg, l, tt, e, r, mesh))
+            v2 = cache[key](params,
+                            _mesh_put(lat, mesh, None, axis),
+                            _mesh_put(t, mesh),
+                            _mesh_put(emb, mesh),
+                            _mesh_put(res, mesh, None, None, axis))
+        else:
+            return None
+        if uses_cfg:
+            v_c, v_u = v2[:b], v2[b:]
+            g = jnp.asarray(guidance, v2.dtype)
+            g = g.reshape((b,) + (1,) * (v2.ndim - 1))
+            v = cfg_combine(v_u, v_c, g)
+        else:
+            v = v2
         return [{"velocity": chunk} for chunk in _split_rows(v, sizes)]
 
     def cost(self) -> ModelCost:
@@ -282,7 +402,9 @@ class DiffusionBackbone(Model):
             param_bytes=f.backbone_bytes(),
             act_io_bytes=12.0 * f.n_layers_real * tokens * f.d_model_real * 2.0,
             output_bytes=f.image_tokens * 16 * 2.0,
-            max_parallelism=2,           # latent (CFG) / sequence parallelism
+            # k_max profiled for the sharded plane: 2x from the CFG/latent
+            # branch split, 2x more from batch-row or sequence sharding
+            max_parallelism=4,
             max_batch=8,
             calls_per_request=f.denoise_steps,
         )
@@ -320,12 +442,13 @@ class ControlNet(Model):
         )
         return {"controlnet_residuals": res}
 
-    def execute_batch(
-        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
-    ) -> List[Dict[str, Any]]:
+    @staticmethod
+    def _stack_batch(batch_kwargs: List[Dict[str, Any]]) -> Optional[Tuple]:
+        """Stack a cross-request batch: (lat, cond, emb, t, sizes), or
+        None when latent shapes disagree and stacking would be unsound."""
         lats = [kw["latents"] for kw in batch_kwargs]
         if any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:]):
-            return self._execute_sequential(model_components, batch_kwargs)
+            return None
         sizes = [int(l.shape[0]) for l in lats]
         lat = jnp.concatenate(lats, axis=0)
         cond = jnp.concatenate([kw["cond_latents"] for kw in batch_kwargs], axis=0)
@@ -333,9 +456,56 @@ class ControlNet(Model):
         t = jnp.asarray(np.repeat(
             np.asarray([float(kw["t"]) for kw in batch_kwargs], np.float32),
             sizes))
+        return lat, cond, emb, t, sizes
+
+    def execute_batch(
+        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
+    ) -> List[Dict[str, Any]]:
+        stacked = self._stack_batch(batch_kwargs)
+        if stacked is None:
+            return self._execute_sequential(model_components, batch_kwargs)
+        lat, cond, emb, t, sizes = stacked
         res = model_components["apply"](
             model_components["params"], lat, cond, t, emb)
         # residuals are layer-major [L, B, Ti, d]: batch axis is axis 1
+        return [{"controlnet_residuals": chunk}
+                for chunk in _split_rows(res, sizes, axis=1)]
+
+    def execute_batch_sharded(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        mesh: Any,
+    ) -> Optional[List[Dict[str, Any]]]:
+        """Batch-axis data parallelism for the ControlNet branch: requests
+        shard across the submesh; the layer-major residual stack comes back
+        sharded on its batch axis (axis 1)."""
+        import jax
+
+        if any(kw.get("_patches") for kw in batch_kwargs):
+            return None
+        stacked = self._stack_batch(batch_kwargs)
+        if stacked is None:
+            return None
+        lat, cond, emb, t, sizes = stacked
+        if sum(sizes) % mesh.size:
+            return None
+        cfg = self.family.toy
+        axis = mesh.axis_names[0]
+        cache = _mesh_fn_cache(model_components)
+        key = ("cn", mesh)
+        if key not in cache:
+            cache[key] = jax.jit(shard_map_compat(
+                lambda p, l, cnd, tt, e: controlnet_apply(p, cfg, l, cnd, tt, e),
+                mesh=mesh,
+                in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
+                out_specs=P(None, axis),
+            ))
+        res = cache[key](model_components["params"],
+                         _mesh_put(lat, mesh, axis),
+                         _mesh_put(cond, mesh, axis),
+                         _mesh_put(t, mesh, axis),
+                         _mesh_put(emb, mesh, axis))
         return [{"controlnet_residuals": chunk}
                 for chunk in _split_rows(res, sizes, axis=1)]
 
@@ -347,6 +517,7 @@ class ControlNet(Model):
             act_io_bytes=6.0 * f.n_layers_real * (f.image_tokens + f.text_tokens)
             * f.d_model_real,
             output_bytes=f.controlnet_residual_bytes(),
+            max_parallelism=2,           # batch-axis data parallelism
             max_batch=8,
             calls_per_request=f.denoise_steps,
         )
@@ -388,6 +559,35 @@ class VAEDecode(Model):
             model_components["params"], jnp.concatenate(lats, axis=0))
         return [{"image": chunk} for chunk in _split_rows(img, sizes)]
 
+    def execute_batch_sharded(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        mesh: Any,
+    ) -> Optional[List[Dict[str, Any]]]:
+        """Replicated-weight parallel decode: the VAE params live on every
+        submesh device, latent rows shard across them."""
+        import jax
+
+        lats = [kw["latents"] for kw in batch_kwargs]
+        if any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:]):
+            return None
+        sizes = [int(l.shape[0]) for l in lats]
+        if sum(sizes) % mesh.size:
+            return None
+        axis = mesh.axis_names[0]
+        # decode/encode share one components dict (same model_id), so the
+        # fn cache keys carry the op kind
+        cache = _mesh_fn_cache(model_components)
+        key = ("vae_dec", mesh)
+        if key not in cache:
+            cache[key] = jax.jit(shard_map_compat(
+                lambda p, l: vae_decode(p, l), mesh=mesh,
+                in_specs=(P(), P(axis)), out_specs=P(axis)))
+        img = cache[key](model_components["params"],
+                          _mesh_put(jnp.concatenate(lats, axis=0), mesh, axis))
+        return [{"image": chunk} for chunk in _split_rows(img, sizes)]
+
     def cost(self) -> ModelCost:
         f = self.family
         return ModelCost(
@@ -395,6 +595,7 @@ class VAEDecode(Model):
             param_bytes=f.vae_bytes(),
             act_io_bytes=f.image_tokens * 64 * 48.0,
             output_bytes=f.image_tokens * 64 * 3 * 1.0,   # uint8 pixels
+            max_parallelism=2,           # replicated-weight parallel decode
             max_batch=16,
         )
 
@@ -435,10 +636,37 @@ class VAEEncode(Model):
             model_components["params"], jnp.concatenate(imgs, axis=0))
         return [{"cond_latents": chunk} for chunk in _split_rows(lat, sizes)]
 
+    def execute_batch_sharded(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        mesh: Any,
+    ) -> Optional[List[Dict[str, Any]]]:
+        """Replicated-weight parallel encode (mirror of VAEDecode)."""
+        import jax
+
+        imgs = [self._as_array(kw["image"]) for kw in batch_kwargs]
+        if any(i.shape[1:] != imgs[0].shape[1:] for i in imgs[1:]):
+            return None
+        sizes = [int(i.shape[0]) for i in imgs]
+        if sum(sizes) % mesh.size:
+            return None
+        axis = mesh.axis_names[0]
+        cache = _mesh_fn_cache(model_components)
+        key = ("vae_enc", mesh)
+        if key not in cache:
+            cache[key] = jax.jit(shard_map_compat(
+                lambda p, i: vae_encode(p, i), mesh=mesh,
+                in_specs=(P(), P(axis)), out_specs=P(axis)))
+        lat = cache[key](model_components["params"],
+                          _mesh_put(jnp.concatenate(imgs, axis=0), mesh, axis))
+        return [{"cond_latents": chunk} for chunk in _split_rows(lat, sizes)]
+
     def cost(self) -> ModelCost:
         c = VAEDecode(self.family).cost()
         return ModelCost(c.flops_per_item, c.param_bytes, c.act_io_bytes,
-                         self.family.latent_bytes(), max_batch=16)
+                         self.family.latent_bytes(),
+                         max_parallelism=c.max_parallelism, max_batch=16)
 
 
 class DenoiseStep(Model):

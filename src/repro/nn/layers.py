@@ -268,6 +268,8 @@ def gqa_attention(
     # non-causal, mask-free joint-sequence attention (the MMDiT hot path):
     # Pallas flash-attention kernel, unless the config flag routes the
     # reference path.  Long sequences keep the dedicated blockwise paths.
+    # (The sharded sequence-parallel rectangle — local queries against the
+    # all-gathered K/V — calls ``mha`` directly; see _mmdit_block_seq.)
     if (_flash_enabled and not causal and window is None and mask is None
             and q_offset == 0 and softmax_scale is None and sq == sk
             and sq <= 8192):

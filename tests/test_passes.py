@@ -53,3 +53,42 @@ def test_async_lora_inserts_fetch_and_checks():
     for n in graph.nodes_of_model("backbone:sd3"):
         assert n.attrs.get("lora_check") == [fetches[0].id]
         assert n.attrs.get("patch_ids") == [fetches[0].op.patch.model_id]
+
+
+# --------------------------------------------------------------------------
+# ApproxCache store semantics (LRU + per-entry step bound)
+# --------------------------------------------------------------------------
+
+def test_approx_cache_evicts_lru_not_arbitrary():
+    cache = ApproxCache(similarity_threshold=1.0, capacity=2)
+    cache.insert("alpha beta gamma", 5, "lat-a")
+    cache.insert("delta epsilon zeta", 5, "lat-b")
+    # a HIT on the oldest entry must refresh it ...
+    assert cache.lookup("alpha beta gamma", 10) == "lat-a"
+    # ... so inserting a third entry evicts the *un-touched* one
+    cache.insert("ethereal ocean waves", 5, "lat-c")
+    assert cache.lookup("alpha beta gamma", 10) == "lat-a"
+    assert cache.lookup("delta epsilon zeta", 10) is None      # evicted
+    assert cache.lookup("ethereal ocean waves", 10) == "lat-c"
+    assert len(cache) == 2 and cache.evictions == 1
+
+
+def test_approx_cache_insert_refreshes_recency():
+    cache = ApproxCache(similarity_threshold=1.0, capacity=2)
+    cache.insert("alpha beta gamma", 5, "lat-a")
+    cache.insert("delta epsilon zeta", 5, "lat-b")
+    cache.insert("alpha beta gamma", 7, "lat-a2")     # re-insert touches
+    cache.insert("ethereal ocean waves", 5, "lat-c")
+    assert cache.lookup("delta epsilon zeta", 10) is None      # evicted
+    assert cache.lookup("alpha beta gamma", 10) == "lat-a2"
+
+
+def test_approx_cache_bounds_steps_per_entry():
+    cache = ApproxCache(similarity_threshold=1.0, max_steps_per_entry=3)
+    for step in range(6):
+        cache.insert("alpha beta gamma", step, f"lat-{step}")
+    # oldest-inserted steps dropped; the three newest remain
+    assert cache.lookup("alpha beta gamma", 2) is None
+    assert cache.lookup("alpha beta gamma", 10) == "lat-5"
+    assert cache.lookup("alpha beta gamma", 4) == "lat-4"
+    assert cache.evictions == 3

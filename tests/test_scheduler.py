@@ -1,6 +1,15 @@
 """Algorithm 1: batching, sharing, adaptive parallelism, scoring."""
 
-from repro.core import ServingSystem, Scheduler
+from repro.core import (
+    MeshManager,
+    Model,
+    ModelCost,
+    ProfileStore,
+    Scheduler,
+    ServingSystem,
+    TensorType,
+)
+from repro.core.profiles import GPU_H800
 
 
 def _run(toy_workflow, n_exec=4, n_req=12, rate=0.2, **sched_kw):
@@ -74,3 +83,114 @@ def test_sharing_disabled_never_mixes(toy_workflow, toy_basic_workflow):
     sys_.run()
     for d in sys_.coordinator.dispatch_log:
         assert len({rn.request.workflow_name for rn in d.nodes}) == 1
+
+
+# --------------------------------------------------------------------------
+# choose_parallelism edge cases (§5.2 decision logic in isolation)
+# --------------------------------------------------------------------------
+
+class _CostOnly(Model):
+    def __init__(self, model_id, **cost_kw):
+        self._cost_kw = cost_kw
+        super().__init__(model_id=model_id)
+
+    def setup_io(self):
+        self.add_input("x", TensorType())
+        self.add_output("y", TensorType())
+
+    def cost(self):
+        kw = dict(flops_per_item=5e13, param_bytes=4e9, act_io_bytes=1e9,
+                  output_bytes=4e6)
+        kw.update(self._cost_kw)
+        return ModelCost(**kw)
+
+
+def _profiles(**cost_kw):
+    ps = ProfileStore(GPU_H800)
+    ps.profile_model(_CostOnly("m", **cost_kw))
+    return ps
+
+
+def test_choose_parallelism_capped_by_free_executors():
+    s = Scheduler(_profiles(max_parallelism=4))
+    assert s.choose_parallelism("m", n_avail=1) == 1
+    assert s.choose_parallelism("m", n_avail=2) == 2
+    assert s.choose_parallelism("m", n_avail=3) == 3
+    assert s.choose_parallelism("m", n_avail=8) == 4     # k_max governs
+
+
+def test_choose_parallelism_kmax_one_never_sharded():
+    ps = _profiles(max_parallelism=1)
+    for kw in ({}, {"fixed_parallelism": 8}, {"max_parallelism_cap": 4},
+               {"fixed_parallelism": 8, "max_parallelism_cap": 4}):
+        assert Scheduler(ps, **kw).choose_parallelism("m", n_avail=8) == 1
+
+
+def test_fixed_parallelism_vs_cap_interaction():
+    ps = _profiles(max_parallelism=8)
+    # the cap bounds the fixed degree, never the other way around
+    assert Scheduler(ps, fixed_parallelism=4,
+                     max_parallelism_cap=2).choose_parallelism("m", 8) == 2
+    assert Scheduler(ps, fixed_parallelism=2,
+                     max_parallelism_cap=4).choose_parallelism("m", 8) == 2
+    # static parallelism ignores the free-executor count: the dispatch
+    # loop WAITS for a free device group instead of degrading k (Fig 4)
+    assert Scheduler(ps, fixed_parallelism=4).choose_parallelism("m", 1) == 4
+
+
+def test_queue_pressure_disables_adaptive_parallelism():
+    s = Scheduler(_profiles(max_parallelism=4))
+    assert s.choose_parallelism("m", 4, n_queued=4, low_load=True) == 1
+    assert s.choose_parallelism("m", 4, n_queued=0, low_load=False) == 1
+    assert Scheduler(_profiles(max_parallelism=4),
+                     adaptive_parallelism=False).choose_parallelism("m", 4) == 1
+
+
+def test_mesh_clamps_k_to_assemblable_submesh():
+    ps = _profiles(max_parallelism=8)
+    mesh = MeshManager(devices=[object(), object()])     # 2-device host
+    s = Scheduler(ps, mesh=mesh)
+    # 4 free executors but only 2 distinct devices behind them
+    assert s.choose_parallelism("m", 4, avail_ids=[0, 1, 2, 3]) == 2
+    # executors 0 and 2 share device 0: nothing to shard across
+    assert s.choose_parallelism("m", 2, avail_ids=[0, 2]) == 1
+    # fixed degree clamps to the fleet-wide device ceiling
+    sf = Scheduler(ps, fixed_parallelism=8, mesh=mesh)
+    assert sf.choose_parallelism("m", 8, avail_ids=[0, 1, 2, 3]) == 2
+
+
+def test_mesh_disabled_forces_single_device(monkeypatch):
+    monkeypatch.setenv("REPRO_SHARDED_EXEC", "0")
+    mesh = MeshManager(devices=[object(), object(), object(), object()])
+    s = Scheduler(_profiles(max_parallelism=8), mesh=mesh)
+    assert s.choose_parallelism("m", 4, avail_ids=[0, 1, 2, 3]) == 1
+
+
+def test_fixed_parallelism_waits_when_free_executors_share_devices():
+    """8-executors-on-fewer-devices fleets: a static-k batch must WAIT
+    for free executors on k distinct devices, not silently dispatch onto
+    a smaller submesh."""
+    from repro.core import Executor
+
+    ps = _profiles(max_parallelism=4)
+    mesh = MeshManager(devices=[object(), object()])     # 2-device host
+    sched = Scheduler(ps, fixed_parallelism=2, mesh=mesh,
+                      use_declared_max_batch=True)
+
+    class _Node:
+        model_id = "m"
+        arrival_time, depth, seq = 0.0, 0, 0
+        effective_patches = ()
+        batch_key = ("m", ())
+
+    fetch = lambda batch, eid: 0.0
+    # executors 0 and 2 both own device 0: nothing to shard across -> wait
+    ready = [_Node()]
+    decisions = sched.schedule_cycle(
+        ready, [Executor(0, ps), Executor(2, ps)], fetch)
+    assert decisions == [] and len(ready) == 1
+    # executors 0 and 1 own distinct devices -> dispatch at k=2
+    decisions = sched.schedule_cycle(
+        ready, [Executor(0, ps), Executor(1, ps)], fetch)
+    assert len(decisions) == 1 and decisions[0].parallelism == 2
+    assert sorted(decisions[0].executor_ids) == [0, 1]
