@@ -8,8 +8,15 @@
 * batched vs sequential executable plane: B simultaneous requests stacked
   into one forward per (model, ScheduledBatch) vs per-request dispatch —
   images/s at B=1/2/4/8 and per-node dispatch overhead, emitted to
-  ``BENCH_batched_exec.json``."""
+  ``BENCH_batched_exec.json``;
+* segment-size study: fixed scan chunks S=1/2/4/full vs the adaptive
+  chunk policy, at low load (solo requests) and high load (staggered
+  waves), emitted to ``BENCH_segments.json``.
 
+CLI: ``python -m benchmarks.bench_overhead [--study segments] [--smoke]``
+runs one study standalone (the CI smoke job uses this)."""
+
+import argparse
 import json
 import os
 import time
@@ -21,6 +28,8 @@ from repro.sim import generate_trace
 
 BATCHED_JSON = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_batched_exec.json")
+SEGMENTS_JSON = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_segments.json")
 
 
 class _PlaneArm:
@@ -160,6 +169,142 @@ def batched_exec_study(trials: int = 24, steps: int = 2) -> None:
          f"throughput monotone B=1..8: {mono}; wrote {BATCHED_JSON}")
 
 
+class _SegmentArm:
+    """One segment-granularity arm: a 1-executor executable plane whose
+    scheduler runs fixed chunks (``chunk=S``) or the adaptive policy
+    (``chunk=None``).  Serves two workloads per trial:
+
+    * **low load** — one solo request per wave (chunk size is pure
+      per-node overhead: bigger chunks amortize dispatch);
+    * **high load** — a wave of ``high_n`` requests with staggered
+      timeline arrivals, so later requests land while earlier ones are
+      mid-denoise (small chunks let them merge into step-level batches).
+
+    A warm-up of both patterns runs at build time so every (S, B) scan
+    variant is compiled before measurement."""
+
+    def __init__(self, chunk, steps: int, high_n: int = 6):
+        self.chunk = chunk
+        self.steps = steps
+        self.high_n = high_n
+        self.backend = LocalBackend()
+        self.sys = ServingSystem(n_executors=1, backend=self.backend)
+        self.sys.coordinator.scheduler = Scheduler(
+            self.sys.profiles, use_declared_max_batch=True,
+            segment_chunk=chunk)
+        self.wf = make_basic_workflow("sd3", ModelSet(FAMILIES["sd3"]))
+        self.sys.register(self.wf)
+        self._trial = 0
+        self.low_waves: list = []
+        self.high_waves: list = []
+        self._wave(1)                       # warm: solo pattern
+        self._wave(self.high_n)             # warm: staggered pattern
+        self.low_dispatches = 0
+
+    def _wave(self, n_requests: int) -> float:
+        """One wave; returns wall seconds from first submit to all output
+        images materialized.  Requests stagger 1 ms apart on the event
+        timeline — at n=1 this is a solo request; at n>1 later arrivals
+        find the executor busy with an earlier request's segment."""
+        import jax
+
+        coord = self.sys.coordinator
+        base = coord.now
+        self._trial += 1
+        t0 = time.perf_counter()
+        reqs = [
+            self.sys.submit(
+                self.wf.name,
+                inputs={"seed": 1000 * self._trial + i, "prompt": "seg probe"},
+                arrival=base + 0.001 * i, steps=self.steps)
+            for i in range(n_requests)
+        ]
+        self.sys.run()
+        for r in reqs:
+            img = coord.engine.value_of(r.ref_key(r.graph.outputs["image"]))
+            jax.block_until_ready(img)
+        return time.perf_counter() - t0
+
+    def run_trial(self) -> None:
+        n_disp = len(self.sys.coordinator.dispatch_log)
+        self.low_waves.append(self._wave(1))
+        if not self.low_dispatches:
+            self.low_dispatches = len(self.sys.coordinator.dispatch_log) - n_disp
+        self.high_waves.append(self._wave(self.high_n))
+
+    @staticmethod
+    def _median(xs: list) -> float:
+        xs = sorted(xs)
+        mid = len(xs) // 2
+        return xs[mid] if len(xs) % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
+    @property
+    def low_img_s(self) -> float:
+        return 1.0 / self._median(self.low_waves)
+
+    @property
+    def high_img_s(self) -> float:
+        return self.high_n / self._median(self.high_waves)
+
+
+def segments_study(trials: int = 12, steps: int = 8, high_n: int = 6) -> None:
+    """Segment-size study (``BENCH_segments.json``): throughput vs fixed
+    chunk size S at batch=1 must grow monotonically (target >=1.3x at
+    S=full over S=1), and the adaptive policy must recover >=95% of the
+    best fixed chunk at BOTH load points.  Arms are built (and jit-warmed)
+    up front and trials interleave round-robin, so timing-noise bursts
+    hit every arm alike; medians are reported.  Flash attention is off
+    for the same reason as the batched study: interpret-mode Pallas
+    emulation would swamp the dispatch-overhead signal on CPU."""
+    from repro.nn.layers import set_flash_attention
+
+    sizes = [s for s in (1, 2, 4) if s < steps] + [steps]
+    prev_flash = set_flash_attention(False)
+    try:
+        arms = {f"fixed-{s}": _SegmentArm(s, steps, high_n) for s in sizes}
+        arms["adaptive"] = _SegmentArm(None, steps, high_n)
+        for _ in range(trials):
+            for arm in arms.values():
+                arm.run_trial()
+    finally:
+        set_flash_attention(prev_flash)
+    rows = []
+    for name, arm in arms.items():
+        rows.append({
+            "arm": name,
+            "chunk": arm.chunk,
+            "steps": steps,
+            "low_load_images_per_s": arm.low_img_s,
+            "high_load_images_per_s": arm.high_img_s,
+            "low_load_dispatches_per_request": arm.low_dispatches,
+        })
+        emit(f"s75_segments_{name}", 1e6 / arm.low_img_s,
+             f"{arm.low_img_s:.2f} img/s solo, {arm.high_img_s:.2f} img/s "
+             f"at {high_n}-deep load ({arm.low_dispatches} dispatches/req)")
+    fixed = [r for r in rows if r["arm"].startswith("fixed-")]
+    adaptive = rows[-1]
+    mono = all(fixed[i + 1]["low_load_images_per_s"]
+               >= fixed[i]["low_load_images_per_s"]
+               for i in range(len(fixed) - 1))
+    gain = fixed[-1]["low_load_images_per_s"] / fixed[0]["low_load_images_per_s"]
+    rec_low = adaptive["low_load_images_per_s"] / max(
+        r["low_load_images_per_s"] for r in fixed)
+    rec_high = adaptive["high_load_images_per_s"] / max(
+        r["high_load_images_per_s"] for r in fixed)
+    summary = {
+        "monotone_low_load": mono,
+        "full_vs_1_speedup": gain,
+        "adaptive_recovery_low": rec_low,
+        "adaptive_recovery_high": rec_high,
+    }
+    with open(SEGMENTS_JSON, "w") as f:
+        json.dump({"rows": rows, "summary": summary}, f, indent=2)
+    emit("s75_segments_summary", gain * 100,
+         f"monotone={mono}; S=full vs S=1: {gain:.2f}x; adaptive recovers "
+         f"{100*rec_low:.0f}% (low) / {100*rec_high:.0f}% (high) of best "
+         f"fixed; wrote {SEGMENTS_JSON}")
+
+
 def run() -> None:
     # executable plane: micro-serving vs direct sequential execution.
     # One warm-up request first so jit compilation is excluded from BOTH
@@ -222,3 +367,30 @@ def run() -> None:
 
     # batched vs sequential executable plane (BENCH_batched_exec.json)
     batched_exec_study()
+
+    # segment-size study (BENCH_segments.json)
+    segments_study()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--study", choices=("all", "segments", "batched"),
+                    default="all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trial counts — CI liveness check, not a "
+                         "measurement")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.study == "segments":
+        if args.smoke:
+            segments_study(trials=2, steps=4, high_n=3)
+        else:
+            segments_study()
+    elif args.study == "batched":
+        batched_exec_study(trials=4 if args.smoke else 24)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,9 @@ from repro.core.passes import (
     DeadCodeEliminationPass,
     InlineTrivialPass,
     JitCompilePass,
+    SegmentFusionPass,
     default_passes,
+    segment_fusion_enabled,
 )
 from repro.core.profiles import GPU_H800, TPU_V5E, HardwareSpec, LatencyProfile, ProfileStore
 from repro.core.registry import ServingSystem, WorkflowRegistry

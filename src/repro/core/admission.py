@@ -17,7 +17,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional
 
 from repro.core.compiler import CompiledGraph
-from repro.core.profiles import ProfileStore
+from repro.core.profiles import ProfileStore, node_infer_time
 
 
 def critical_path_seconds(
@@ -35,7 +35,7 @@ def critical_path_seconds(
         if n.id in completed or n.attrs.get("inline") or n.attrs.get("io_only"):
             w = 0.0
         else:
-            w = profiles.profile_model(n.op).infer_time(1, 1)
+            w = node_infer_time(profiles, n)
         finish[n.id] = start + w
         best = max(best, finish[n.id])
     return best

@@ -108,6 +108,33 @@ class CompiledGraph:
         self.nodes.append(node)
         self.rebuild()
 
+    def fuse_nodes(
+        self,
+        fused: Iterable[WorkflowNode],
+        replacement: WorkflowNode,
+        output_map: Dict[ValueRef, ValueRef],
+    ) -> None:
+        """Replace a connected region of nodes with one node.
+
+        ``output_map`` maps every ref produced INSIDE the region that is
+        still consumed outside it (or named as a workflow output) to the
+        corresponding output ref of ``replacement``.  Refs produced in the
+        region but absent from the map must be fully internal — consumed
+        only by other fused nodes; anything else fails validation after
+        the rewrite, which is the safety net pass authors rely on.
+        """
+        fused_ids = {n.id for n in fused}
+        self.nodes = [n for n in self.nodes if n.id not in fused_ids]
+        self.nodes.append(replacement)
+        for n in self.nodes:
+            for name, v in list(n.inputs.items()):
+                if isinstance(v, ValueRef) and v in output_map:
+                    n.inputs[name] = output_map[v]
+        for out_name, ref in list(self.outputs.items()):
+            if ref in output_map:
+                self.outputs[out_name] = output_map[ref]
+        self.rebuild()
+
     def _rewire(self, mapping: Dict[Any, ValueRef]) -> None:
         for n in self.nodes:
             for name, v in list(n.inputs.items()):
@@ -178,7 +205,9 @@ class GraphCompiler:
         self.passes.append(p)
 
     def compile(self, workflow: Workflow) -> CompiledGraph:
-        graph = CompiledGraph(workflow, list(workflow.nodes))
+        # clone nodes so passes rewrite THIS graph, not the template's
+        # cached trace (one workflow may compile under several pipelines)
+        graph = CompiledGraph(workflow, [n.clone() for n in workflow.nodes])
         graph.validate()
         for p in self.passes:
             p.run(graph)

@@ -19,7 +19,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.admission import AdmissionController
 from repro.core.executor import Executor
-from repro.core.profiles import GPU_H800, HardwareSpec, ProfileStore
+from repro.core.profiles import GPU_H800, HardwareSpec, ProfileStore, node_infer_time
 from repro.core.registry import ServingSystem
 from repro.core.workflow import WorkflowTemplate
 
@@ -88,7 +88,7 @@ class CoordinatorGroup:
         work = []
         for cl in clusters:
             w = sum(
-                sum(probe.profiles.profile_model(n.op).infer_time(1, 1)
+                sum(node_infer_time(probe.profiles, n)
                     for n in probe.registry.instantiate(name).nodes
                     if not (n.attrs.get("inline") or n.attrs.get("io_only")))
                 for name in cl

@@ -37,7 +37,12 @@ class ModelCost:
                           parallelism (§5.2), profiled offline;
     ``max_batch``       — ``B_max``: profiled maximum useful batch (§5.1);
     ``calls_per_request`` — how many times a single request invokes this
-                          model (e.g. #denoising steps for the backbone).
+                          model (e.g. #denoising steps for the backbone);
+    ``steps_per_call``  — for segment models (fused denoise chains): how
+                          many internal steps one full call runs.  The
+                          per-step terms (``flops_per_item`` etc.) describe
+                          ONE step; segment cost = S× per-step cost with
+                          the fixed dispatch overhead paid once.
     """
 
     def __init__(
@@ -49,6 +54,7 @@ class ModelCost:
         max_parallelism: int = 1,
         max_batch: int = 8,
         calls_per_request: int = 1,
+        steps_per_call: int = 1,
     ) -> None:
         self.flops_per_item = float(flops_per_item)
         self.param_bytes = float(param_bytes)
@@ -57,6 +63,7 @@ class ModelCost:
         self.max_parallelism = int(max_parallelism)
         self.max_batch = int(max_batch)
         self.calls_per_request = int(calls_per_request)
+        self.steps_per_call = int(steps_per_call)
 
 
 class Model(abc.ABC):
@@ -221,6 +228,14 @@ class Model(abc.ABC):
         return [self.execute(model_components, **kw) for kw in batch_kwargs]
 
     # ------------------------------------------------- sharded execution
+    def clamp_parallelism(self, batch_size: int, k: int) -> int:
+        """Largest parallelism ≤ ``k`` this model can actually use for a
+        stacked batch of ``batch_size`` requests.  The scheduler consults
+        this after its load-based choice so dispatched degrees are
+        feasible by construction instead of silently falling back (e.g. a
+        CFG pair cannot row-shard across 3 devices).  Default: accept."""
+        return k
+
     def execute_batch_sharded(
         self,
         model_components: Dict[str, Any],
@@ -341,6 +356,26 @@ class Model(abc.ABC):
     # Is this a lightweight operator (scheduler may run it inline on the
     # coordinator instead of dispatching to an executor)?
     trivial: bool = False
+
+    # ------------------------------------------------- segment execution
+    # Role this model plays in a fusable per-step denoise chain
+    # (``SegmentFusionPass`` pattern-matches on these):
+    #   "backbone"   — the diffusion backbone (must offer build_segment());
+    #   "denoise"    — the scheduler (Euler) step;
+    #   "controlnet" — an add-on residual branch;
+    #   "combine"    — the residual fan-in sum.
+    # None (the default) means the model never participates in fusion.
+    scan_role: Optional[str] = None
+
+    # True for fused multi-step segment models (e.g. ``DenoiseSegment``).
+    # A segment's node carries its step schedule in the node inputs
+    # (``t_mid``/``t_cur``/``t_next`` tuples); the runtime may execute it
+    # in load-adaptive chunks by passing the reserved kwargs
+    # ``_seg_start`` (first step index, per item) and ``_seg_steps``
+    # (chunk length, uniform across a batch) to ``execute``/
+    # ``execute_batch``/``execute_batch_sharded``.  One full call covers
+    # ``cost().steps_per_call`` steps.
+    is_segment: bool = False
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"<{type(self).__name__} id={self.model_id}>"

@@ -96,10 +96,17 @@ class LatencyProfile:
         return sync_bytes / self.hw.ici_bw + self.hw.transfer_latency * 2
 
     # ------------------------------------------------------------ queries
-    def infer_time(self, batch: int, k: int = 1) -> float:
+    def infer_time(self, batch: int, k: int = 1,
+                   steps: Optional[int] = None) -> float:
+        """Seconds for one call.  For segment models the per-step terms
+        repeat ``steps`` times (weights re-stream from HBM and collectives
+        re-synchronize every step) while the fixed dispatch overhead is
+        paid ONCE — the analytic form of what segment fusion buys.
+        ``steps=None`` means the model's full ``steps_per_call``."""
         k = max(1, min(k, self.cost.max_parallelism))
+        s = self.cost.steps_per_call if steps is None else max(1, int(steps))
         t = max(self.compute_term(batch, k), self.memory_term(batch, k))
-        return t + self.collective_term(batch, k) + self.hw.dispatch_overhead
+        return s * (t + self.collective_term(batch, k)) + self.hw.dispatch_overhead
 
     def speedup(self, batch: int, k: int) -> float:
         return self.infer_time(batch, 1) / self.infer_time(batch, k)
@@ -140,6 +147,23 @@ class LatencyProfile:
     @property
     def param_bytes(self) -> float:
         return self.cost.param_bytes
+
+
+def node_segment_steps(node: Any) -> Optional[int]:
+    """Total step count a segment NODE carries (its schedule length), or
+    None for ordinary nodes.  Segment ops share a profile per model_id,
+    but two workflows may fuse different step counts under it — per-node
+    estimates must read the schedule off the node, not the profile."""
+    if not getattr(node.op, "is_segment", False):
+        return None
+    return len(node.inputs.get("t_mid") or ()) or None
+
+
+def node_infer_time(profiles: "ProfileStore", node: Any,
+                    batch: int = 1, k: int = 1) -> float:
+    """Analytic inference seconds for one workflow node (segment-aware)."""
+    return profiles.profile_model(node.op).infer_time(
+        batch, k, steps=node_segment_steps(node))
 
 
 class ProfileStore:

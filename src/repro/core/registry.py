@@ -17,7 +17,7 @@ from repro.core.passes import default_passes
 from repro.core.profiles import GPU_H800, HardwareSpec, ProfileStore
 from repro.core.runtime import Coordinator, Request
 from repro.core.scheduler import Scheduler
-from repro.core.workflow import WorkflowTemplate
+from repro.core.workflow import WorkflowTemplate, freeze_bindings
 
 
 class WorkflowRegistry:
@@ -33,11 +33,15 @@ class WorkflowRegistry:
         return sorted(self._templates)
 
     def instantiate(self, name: str, **static_bindings: Any) -> CompiledGraph:
-        key = (name, tuple(sorted(static_bindings.items())))
-        if key not in self._graph_cache:
-            wf = self._templates[name].instantiate(**static_bindings)
-            self._graph_cache[key] = self.compiler.compile(wf)
-        return self._graph_cache[key]
+        frozen = freeze_bindings(static_bindings)
+        key = None if frozen is None else (name, frozen)
+        if key is not None and key in self._graph_cache:
+            return self._graph_cache[key]
+        wf = self._templates[name].instantiate(**static_bindings)
+        graph = self.compiler.compile(wf)
+        if key is not None:      # unhashable statics: uncached re-compile
+            self._graph_cache[key] = graph
+        return graph
 
 
 class ServingSystem:

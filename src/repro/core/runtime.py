@@ -39,7 +39,7 @@ from repro.core.executor import (
     LocalBackend,
     ShardedBackend,
 )
-from repro.core.profiles import ProfileStore
+from repro.core.profiles import ProfileStore, node_infer_time
 from repro.core.scheduler import ScheduledBatch, Scheduler
 from repro.core.types import ValueRef, nbytes_of
 
@@ -54,7 +54,7 @@ class RequestNode:
     __slots__ = (
         "request", "node", "uid", "state", "pending_eager", "deferred_arrivals",
         "own_done_time", "executor_ids", "seq", "infer_est", "dispatch_time",
-        "ready_since",
+        "ready_since", "seg_done", "seg_state", "seg_pending",
     )
 
     def __init__(self, request: "Request", node: Any, infer_est: float) -> None:
@@ -71,6 +71,12 @@ class RequestNode:
         self.infer_est = infer_est
         self.dispatch_time: Optional[float] = None
         self.ready_since: Optional[float] = None   # queueing-delay signal
+        # segment progress (DenoiseSegment nodes execute in load-adaptive
+        # chunks): steps already committed, the carried latent between
+        # chunks, and the not-yet-committed result of the running chunk
+        self.seg_done: int = 0
+        self.seg_state: Optional[Any] = None
+        self.seg_pending: Optional[Any] = None
 
     # ---- scheduling views -------------------------------------------------
     @property
@@ -101,6 +107,34 @@ class RequestNode:
     @property
     def batch_key(self) -> Tuple[str, Tuple[str, ...]]:
         return (self.model_id, self.effective_patches)
+
+    @property
+    def patches_pending(self) -> bool:
+        """Adapters wanted but whose async fetch has not resolved yet.
+        The scheduler bounds a segment's chunk to 1 while this holds, so
+        the adapter folds in at the earliest step boundary — the fused
+        equivalent of the unfused graph's per-step readiness checks."""
+        want = self.node.attrs.get("patch_ids")
+        if not want:
+            return False
+        checks = self.node.attrs.get("lora_check", [])
+        return not all(c in self.request.lora_ready for c in checks)
+
+    @property
+    def segment_total(self) -> int:
+        """Step count of a segment node's schedule (0 for ordinary nodes)."""
+        if not getattr(self.node.op, "is_segment", False):
+            return 0
+        return len(self.node.inputs.get("t_mid") or ())
+
+    @property
+    def segment_remaining(self) -> Optional[int]:
+        """Steps still to run, or None for non-segment nodes — what the
+        scheduler's chunk policy reads."""
+        total = self.segment_total
+        if not total:
+            return None
+        return max(0, total - self.seg_done)
 
     def input_keys(self, eager_only: bool = True) -> List[str]:
         refs = self.node.eager_input_refs() if eager_only else self.node.all_input_refs()
@@ -138,7 +172,7 @@ class Request:
         for n in graph.nodes:
             est = 0.0
             if not (n.attrs.get("inline") or n.attrs.get("io_only")):
-                est = profiles.profile_model(n.op).infer_time(1, 1)
+                est = node_infer_time(profiles, n)
             rn = RequestNode(self, n, est)
             self.nodes[n.id] = rn
             self.remaining += 1
@@ -287,8 +321,33 @@ class Coordinator:
         for rnode in batch.nodes:
             if rnode.state != RUNNING:
                 continue  # e.g. requeued after executor failure
+            if rnode.segment_total and self._advance_segment(rnode, batch):
+                continue  # chunk committed; steps remain — re-chunked
             rnode.own_done_time = self.now
             self._try_finish_running_node(rnode)
+
+    def _advance_segment(self, rnode: RequestNode, batch: ScheduledBatch) -> bool:
+        """Commit a finished segment chunk.  Returns True when steps
+        remain — the node goes back to READY and the next scheduling
+        cycle re-chunks the request's remaining steps against the queue
+        depth it sees THEN (load-adaptive granularity, §5.2)."""
+        total = rnode.segment_total
+        rnode.seg_done = min(total, rnode.seg_done + max(1, batch.segment_steps))
+        finished = rnode.seg_done >= total
+        if self.backend is not None and rnode.seg_pending is not None:
+            out, rnode.seg_pending = rnode.seg_pending, None
+            if finished:
+                rnode.request.output_values[rnode.uid] = out
+            else:
+                rnode.seg_state = out.get("latents")
+        if finished:
+            return False
+        rnode.state = READY
+        rnode.executor_ids = []
+        rnode.own_done_time = None
+        rnode.ready_since = self.now
+        self.ready.append(rnode)
+        return True
 
     def _on_node_late_complete(self, rnode: RequestNode) -> None:
         if rnode.state in (RUNNING, AWAITING):
@@ -305,6 +364,7 @@ class Coordinator:
                     rn.executor_ids = []
                     rn.own_done_time = None
                     rn.ready_since = self.now
+                    rn.seg_pending = None    # uncommitted chunk re-runs
                     if not rn.node.attrs.get("inline") and not rn.node.attrs.get("io_only"):
                         self.ready.append(rn)
         # lineage-based recovery of lost values
@@ -336,6 +396,9 @@ class Coordinator:
         rnode.state = PENDING
         rnode.own_done_time = None
         rnode.executor_ids = []
+        rnode.seg_done = 0               # lineage recovery replays the
+        rnode.seg_state = None           # whole segment from its inputs
+        rnode.seg_pending = None
         rnode.pending_eager = sum(
             1 for ref in rnode.node.eager_input_refs()
             if ref.producer is not None and not self.engine.exists(req.ref_key(ref))
@@ -568,6 +631,7 @@ class Coordinator:
         for rns in groups.values():
             lead = rns[0]
             op = lead.node.op
+            is_segment = getattr(op, "is_segment", False)
             effective = lead.effective_patches
             patches = [p for p in op.patches if p.model_id in effective]
             batch_kwargs: List[Dict[str, Any]] = []
@@ -578,6 +642,14 @@ class Coordinator:
                         kwargs[name] = self.engine.value_of(rn.request.ref_key(v))
                     else:
                         kwargs[name] = v
+                if is_segment:
+                    # resume mid-schedule: the carried latent replaces the
+                    # graph-input latent, and the chosen chunk bounds how
+                    # many scan steps this dispatch runs
+                    if rn.seg_state is not None:
+                        kwargs["latents"] = rn.seg_state
+                    kwargs["_seg_start"] = rn.seg_done
+                    kwargs["_seg_steps"] = batch.segment_steps
                 batch_kwargs.append(kwargs)
             if submesh is not None:
                 outs, load_dt, exec_dt = self.backend.execute_batch(
@@ -586,7 +658,12 @@ class Coordinator:
                 outs, load_dt, exec_dt = self.backend.execute_batch(
                     op, batch_kwargs, patches=patches)
             for rn, out in zip(rns, outs):
-                rn.request.output_values[rn.uid] = out
+                if is_segment:
+                    # committed at batch_done (survives executor failure
+                    # requeue without double-applying the chunk)
+                    rn.seg_pending = out
+                else:
+                    rn.request.output_values[rn.uid] = out
             total += load_dt + exec_dt
         return total
 

@@ -38,6 +38,9 @@ class ScheduledBatch:
     l_load: float
     l_infer: float
     patch_swap: float
+    # segment nodes only: how many fused denoise steps this dispatch runs
+    # (the load-adaptive chunk); 1 for ordinary nodes
+    segment_steps: int = 1
 
     @property
     def duration(self) -> float:
@@ -57,6 +60,7 @@ class Scheduler:
         max_batch_cap: Optional[int] = None,
         use_declared_max_batch: bool = False,
         mesh: Optional[Any] = None,
+        segment_chunk: Optional[int] = None,
     ) -> None:
         self.profiles = profiles
         self.adaptive_parallelism = adaptive_parallelism
@@ -75,6 +79,9 @@ class Scheduler:
         # B_max, which is derived from real-scale costs and says nothing
         # about the measured toy models actually being executed
         self.use_declared_max_batch = use_declared_max_batch
+        # fixed segment chunk size (benchmark/ablation knob); None means
+        # load-adaptive chunking via choose_segment_steps
+        self.segment_chunk = segment_chunk
 
     # ----------------------------------------------------------- ordering
     @staticmethod
@@ -143,6 +150,35 @@ class Scheduler:
             return 1
         return max(1, min(n_avail, k_max))
 
+    # --------------------------------------------------------- chunk sizing
+    def choose_segment_steps(self, remaining: int, n_queued: int,
+                             low_load: bool = True,
+                             patches_pending: bool = False) -> int:
+        """Load-adaptive segment granularity (the paper's §5.2 argument
+        that granularity is a *scheduling decision*): run the whole
+        remaining chain in one scan when nothing else is waiting (minimal
+        per-node overhead), drop to step granularity under queue pressure
+        so later arrivals can join cross-request step-level batches and
+        the sharding machinery keeps its per-step placement freedom.  An
+        in-flight adapter fetch also forces step granularity — the
+        adapter must be able to fold in at the next chunk boundary (Katz
+        semantics); a monolithic chunk would run the whole request
+        unpatched.  A fixed ``segment_chunk`` (benchmark knob) overrides
+        the load policy but not the patch bound.
+
+        The load signal is QUEUE DEPTH after batch formation, not the
+        inflight count: when every ready node is inside this batch, the
+        full scan is optimal no matter how many requests are in it —
+        nothing is left behind to starve."""
+        remaining = max(1, int(remaining))
+        if patches_pending:
+            return 1
+        if self.segment_chunk is not None:
+            return max(1, min(remaining, self.segment_chunk))
+        if n_queued <= 0:
+            return remaining
+        return 1
+
     # -------------------------------------------------------------- scoring
     def score_executors(
         self,
@@ -150,6 +186,7 @@ class Scheduler:
         executors: Sequence[Executor],
         k: int,
         data_fetch_cost: Callable[[List[Any], int], float],
+        steps: int = 1,
     ) -> Tuple[List[Executor], float, float, float, float]:
         """Returns (k best executors, l_data, l_load, l_infer, patch_swap)
         evaluated at the chosen placement."""
@@ -165,7 +202,7 @@ class Scheduler:
                 swap = self.profiles.hw.patch_swap_time
             elif not e.has_model(model_id) and want_patches:
                 swap = self.profiles.hw.patch_swap_time
-            l_infer = profile.infer_time(len(batch), k)
+            l_infer = profile.infer_time(len(batch), k, steps=steps)
             score = l_data + l_load + swap + l_infer
             scored.append((score, l_data, l_load, swap, e))
         # equal-score tie-break: executors the autoscaler assigned to this
@@ -198,7 +235,7 @@ class Scheduler:
             [s[4] for s in top],
             lead[1],
             max(s[2] for s in top),   # parallel loads overlap; bound by max
-            self.profiles.get(model_id).infer_time(len(batch), k),
+            self.profiles.get(model_id).infer_time(len(batch), k, steps=steps),
             max(s[3] for s in top),
         )
 
@@ -220,10 +257,25 @@ class Scheduler:
         while ready and avail:
             head = ready[0]
             batch = self.form_batch(head, ready)
+            n_queued = len(ready) - len(batch)
             k = self.choose_parallelism(head.model_id, len(avail),
-                                        n_queued=len(ready) - len(batch),
+                                        n_queued=n_queued,
                                         low_load=low_load,
                                         avail_ids=[e.id for e in avail])
+            op = getattr(getattr(head, "node", None), "op", None)
+            if k > 1 and op is not None and hasattr(op, "clamp_parallelism"):
+                # model-declared feasibility: don't reserve devices a
+                # sharded forward of this batch shape cannot use
+                k = max(1, min(k, op.clamp_parallelism(len(batch), k)))
+            chunk = 1
+            if getattr(head, "segment_remaining", None) is not None:
+                # segment granularity is chosen HERE, per dispatch: the
+                # chunk covers at most the least-advanced node in the batch
+                chunk = self.choose_segment_steps(
+                    min(rn.segment_remaining for rn in batch),
+                    n_queued=n_queued, low_load=low_load,
+                    patches_pending=any(
+                        getattr(rn, "patches_pending", False) for rn in batch))
             if (self.fixed_parallelism is not None
                     and self.profiles.get(head.model_id).max_parallelism > 1
                     and (k > len(avail)
@@ -235,7 +287,7 @@ class Scheduler:
                 # and cannot assemble a k-wide submesh
                 break
             targets, l_data, l_load, l_infer, swap = self.score_executors(
-                batch, avail, k, data_fetch_cost
+                batch, avail, k, data_fetch_cost, steps=chunk
             )
             decisions.append(
                 ScheduledBatch(
@@ -248,6 +300,7 @@ class Scheduler:
                     l_load=l_load,
                     l_infer=l_infer,
                     patch_swap=swap,
+                    segment_steps=chunk,
                 )
             )
             dispatched = set(id(n) for n in batch)

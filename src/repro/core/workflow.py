@@ -71,6 +71,22 @@ class WorkflowNode:
     def output_refs(self) -> Dict[str, ValueRef]:
         return self._output_refs
 
+    def clone(self) -> "WorkflowNode":
+        """A same-id copy with private ``inputs``/``attrs`` dicts.
+
+        The graph compiler clones every node before running passes, so
+        rewrites (input rewiring, fusion, attr annotations) never leak
+        into the template's cached trace — one ``Workflow`` may compile
+        under several pass pipelines (e.g. per-coordinator compilers in a
+        :class:`~repro.core.group.CoordinatorGroup`)."""
+        n = object.__new__(WorkflowNode)
+        n.id = self.id
+        n.op = self.op
+        n.inputs = dict(self.inputs)
+        n.attrs = dict(self.attrs)
+        n._output_refs = self._output_refs
+        return n
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"<Node {self.id}:{self.op.model_id}>"
 
@@ -121,6 +137,7 @@ class Workflow:
         self.outputs: Dict[str, ValueRef] = {}
         self._bindings: Dict[str, Any] = {}       # static overrides while tracing
         self._active = False
+        self._node_index: Dict[int, WorkflowNode] = {}   # id -> node
 
     # -------------------------------------------------------------- scope
     def __enter__(self) -> "Workflow":
@@ -183,15 +200,28 @@ class Workflow:
         if not self._active:
             raise RuntimeError("workflow is not active")
         self.nodes.append(node)
+        self._node_index[node.id] = node
 
     def node_by_id(self, node_id: int) -> WorkflowNode:
-        for n in self.nodes:
-            if n.id == node_id:
-                return n
-        raise KeyError(node_id)
+        try:
+            return self._node_index[node_id]
+        except KeyError:
+            raise KeyError(node_id) from None
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"<Workflow {self.name}: {len(self.nodes)} nodes>"
+
+
+def freeze_bindings(static_bindings: Dict[str, Any]) -> Optional[tuple]:
+    """A hashable cache key for a static-binding dict, or None when any
+    value is unhashable (list/dict statics) — callers then skip caching
+    and re-trace, instead of crashing on the dict lookup."""
+    key = tuple(sorted(static_bindings.items(), key=lambda kv: kv[0]))
+    try:
+        hash(key)
+    except TypeError:
+        return None
+    return key
 
 
 class WorkflowTemplate:
@@ -200,24 +230,31 @@ class WorkflowTemplate:
     ``compose_fn(**static_bindings) -> Workflow`` re-runs the developer's
     composition code.  Per-request graphs are cached keyed on the static
     bindings — this realizes lazy execution with dynamic graph recomposition
-    (§4.3.1) without re-tracing identical requests.
+    (§4.3.1) without re-tracing identical requests.  Unhashable binding
+    values (e.g. a list-valued static) fall back to an uncached re-trace,
+    counted in ``uncached_traces``.
     """
 
     def __init__(self, name: str, compose_fn: Callable[..., Workflow]) -> None:
         self.name = name
         self.compose_fn = compose_fn
         self._cache: Dict[Any, Workflow] = {}
+        self.uncached_traces = 0
 
     def instantiate(self, **static_bindings: Any) -> Workflow:
-        key = tuple(sorted(static_bindings.items()))
-        if key not in self._cache:
-            wf = self.compose_fn(**static_bindings)
-            if not isinstance(wf, Workflow):
-                raise TypeError(
-                    f"compose function for '{self.name}' must return a Workflow"
-                )
+        key = freeze_bindings(static_bindings)
+        if key is None:
+            self.uncached_traces += 1
+        elif key in self._cache:
+            return self._cache[key]
+        wf = self.compose_fn(**static_bindings)
+        if not isinstance(wf, Workflow):
+            raise TypeError(
+                f"compose function for '{self.name}' must return a Workflow"
+            )
+        if key is not None:
             self._cache[key] = wf
-        return self._cache[key]
+        return wf
 
 
 def compose(name: str) -> Callable[[Callable[..., None]], WorkflowTemplate]:

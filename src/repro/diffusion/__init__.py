@@ -12,17 +12,20 @@ from repro.diffusion.config import (
     DiffusionFamily,
     DiTConfig,
 )
-from repro.diffusion.serving import (
+from repro.diffusion.ops import (
     ControlNet,
+    DenoiseSegment,
     DenoiseStep,
     DiffusionBackbone,
     LatentsGenerator,
     LoRAAdapter,
-    ModelSet,
     ResidualCombine,
     TextEncoder,
     VAEDecode,
     VAEEncode,
+)
+from repro.diffusion.workflows import (
+    ModelSet,
     make_basic_workflow,
     make_controlnet_workflow,
     make_lora_workflow,

@@ -39,6 +39,22 @@ def denoise_step(latents: jnp.ndarray, velocity: jnp.ndarray,
     return latents + dt * velocity
 
 
+_denoise_step_jitted = None
+
+
+def denoise_step_jit(latents: jnp.ndarray, velocity: jnp.ndarray,
+                     t_cur: jnp.ndarray, t_next: jnp.ndarray) -> jnp.ndarray:
+    """Jitted :func:`denoise_step`.  The serving plane's inline scheduler
+    step MUST run under jit so XLA makes the same contraction (FMA)
+    decision for ``lat + dt*v`` as it does inside the fused segment scan —
+    eager op-by-op execution rounds the product separately and drifts by
+    1 ulp whenever ``dt`` is not a power of two."""
+    global _denoise_step_jitted
+    if _denoise_step_jitted is None:
+        _denoise_step_jitted = jax.jit(denoise_step)
+    return _denoise_step_jitted(latents, velocity, t_cur, t_next)
+
+
 def cfg_combine(v_uncond: jnp.ndarray, v_cond: jnp.ndarray,
                 guidance: float) -> jnp.ndarray:
     return v_uncond + guidance * (v_cond - v_uncond)

@@ -1,866 +1,47 @@
-"""Servable diffusion models + workflow builders (Table 2's S1-S6).
-
-Every component of a T2I workflow is a :class:`~repro.core.model.Model`
-subclass whose ``cost()`` carries the real-scale statistics (for profiles,
-baselines, roofline) and whose ``load()/execute()`` run the *toy-scale*
-JAX implementation (for the executable plane).  One code path, two scales.
+"""Back-compat shim: ``repro.diffusion.serving`` was split into
+:mod:`repro.diffusion.ops` (the servable Model subclasses) and
+:mod:`repro.diffusion.workflows` (ModelSet + Table-2 workflow builders).
+Existing imports keep working through this module.
 """
 
-from __future__ import annotations
-
-import math
-from typing import Any, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
-
-from repro.core.model import Model, ModelCost
-from repro.core.types import Image, TensorType
-from repro.core.workflow import WorkflowTemplate, compose
-from repro.diffusion.config import DiffusionFamily, DiTConfig, FAMILIES
-from repro.nn.layers import shard_map_compat
-from repro.diffusion.encoders import (
-    init_text_encoder,
-    init_vae,
-    stable_hash,
-    text_encoder_apply,
-    tokenize,
-    tokenize_batch,
-    vae_decode,
-    vae_encode,
+from repro.diffusion.ops import (
+    ControlNet,
+    DenoiseSegment,
+    DenoiseStep,
+    DiffusionBackbone,
+    LatentsGenerator,
+    LoRAAdapter,
+    ResidualCombine,
+    TextEncoder,
+    VAEDecode,
+    VAEEncode,
+    _mesh_fn_cache,
+    _mesh_put,
+    _split_rows,
 )
-from repro.diffusion.lora import fold_lora, init_lora, randomize_lora
-from repro.diffusion.mmdit import (
-    controlnet_apply,
-    init_controlnet,
-    init_mmdit,
-    mmdit_apply,
-    mmdit_apply_seq_sharded,
-    seq_shard_divisor,
-)
-from repro.diffusion.sampler import (
-    cfg_combine,
-    denoise_step,
-    flow_schedule,
-    fused_cfg_velocity,
+from repro.diffusion.workflows import (
+    ModelSet,
+    _denoising_loop,
+    make_basic_workflow,
+    make_controlnet_workflow,
+    make_lora_workflow,
+    table2_setting,
 )
 
-_TOY_VOCAB = 512
-
-
-def _split_rows(val: jnp.ndarray, sizes: List[int], axis: int = 0) -> List[jnp.ndarray]:
-    """Split a stacked batch back into per-request chunks along ``axis``."""
-    out, off = [], 0
-    for n in sizes:
-        idx = (slice(None),) * axis + (slice(off, off + n),)
-        out.append(val[idx])
-        off += n
-    return out
-
-
-def _mesh_put(x: jnp.ndarray, mesh: Any, *spec: Any) -> jnp.ndarray:
-    """Explicitly place an array on a submesh with the given PartitionSpec
-    (device_put reshards committed single-device arrays, so stacked inputs
-    built on the home device move onto the submesh in one transfer)."""
-    import jax
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    return jax.device_put(x, NamedSharding(mesh, P(*spec)))
-
-
-def _mesh_fn_cache(model_components: Dict[str, Any]) -> Dict[Any, Any]:
-    """Per-components cache of jitted shard_map forwards, keyed by
-    (mode, mesh).  Components are themselves cached per (model, patches,
-    device set) by the backend, so entries live exactly as long as their
-    placement does."""
-    return model_components.setdefault("_sharded_fns", {})
-
-
-# --------------------------------------------------------------------------
-# Component models
-# --------------------------------------------------------------------------
-
-class LatentsGenerator(Model):
-    trivial = True
-
-    def __init__(self, family: DiffusionFamily) -> None:
-        self.family = family
-        super().__init__(model_id="latents_generator")
-
-    def setup_io(self) -> None:
-        self.add_input("seed", int)
-        self.add_output("latents", TensorType())
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        cfg = self.family.toy
-        key = jax.random.PRNGKey(int(kw["seed"]))
-        lat = jax.random.normal(
-            key, (1, cfg.latent_size, cfg.latent_size, cfg.latent_channels)
-        )
-        return {"latents": lat}
-
-    def execute_batch(
-        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
-    ) -> List[Dict[str, Any]]:
-        cfg = self.family.toy
-        shape = (1, cfg.latent_size, cfg.latent_size, cfg.latent_channels)
-        keys = jnp.stack(
-            [jax.random.PRNGKey(int(kw["seed"])) for kw in batch_kwargs])
-        lats = jax.vmap(lambda k: jax.random.normal(k, shape))(keys)
-        return [{"latents": lats[i]} for i in range(len(batch_kwargs))]
-
-    def cost(self) -> ModelCost:
-        return ModelCost(1e6, 0, 1e6, self.family.latent_bytes(), max_batch=64)
-
-
-class TextEncoder(Model):
-    def __init__(self, family: DiffusionFamily) -> None:
-        self.family = family
-        super().__init__(model_id=f"text_encoder:{family.name}")
-
-    def setup_io(self) -> None:
-        self.add_input("prompt", str)
-        self.add_output("prompt_embeds", TensorType())
-
-    def load(self, device: Any = None) -> Dict[str, Any]:
-        cfg = self.family.toy
-        params = init_text_encoder(
-            jax.random.PRNGKey(stable_hash(self.model_id) % 2**31),
-            _TOY_VOCAB, cfg.text_dim, n_layers=2, n_heads=4,
-            max_len=cfg.text_tokens,
-        )
-        apply = jax.jit(lambda p, ids: text_encoder_apply(p, ids, n_heads=4))
-        return {"params": params, "apply": apply}
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        cfg = self.family.toy
-        ids = tokenize(kw["prompt"], _TOY_VOCAB, cfg.text_tokens)
-        emb = model_components["apply"](model_components["params"], ids)
-        return {"prompt_embeds": emb}
-
-    def execute_batch(
-        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
-    ) -> List[Dict[str, Any]]:
-        cfg = self.family.toy
-        ids = tokenize_batch([kw["prompt"] for kw in batch_kwargs],
-                             _TOY_VOCAB, cfg.text_tokens)
-        emb = model_components["apply"](model_components["params"], ids)
-        return [{"prompt_embeds": emb[i:i + 1]} for i in range(len(batch_kwargs))]
-
-    def cost(self) -> ModelCost:
-        f = self.family
-        return ModelCost(
-            flops_per_item=f.text_encode_flops(),
-            param_bytes=f.text_encoder_bytes(),
-            act_io_bytes=f.text_encoder_bytes(),      # memory-bound at b=1
-            output_bytes=f.text_tokens * 4096 * 2.0,
-            max_batch=32,
-        )
-
-
-class DiffusionBackbone(Model):
-    """One denoising step of the base diffusion model (CFG included).
-
-    ``eager_controlnet=True`` declares the ControlNet residuals as an
-    EAGER input (serializing ControlNet before the backbone) — the
-    ablation baseline for deferred-fetch inter-node parallelism (§7.3).
-    """
-
-    def __init__(self, family: DiffusionFamily, eager_controlnet: bool = False) -> None:
-        self.family = family
-        self.eager_controlnet = eager_controlnet
-        super().__init__(model_id=f"backbone:{family.name}")
-
-    def setup_io(self) -> None:
-        self.add_input("latents", TensorType())
-        self.add_input("prompt_embeds", TensorType())
-        self.add_input("t", float)
-        self.add_input("controlnet_residuals", TensorType(),
-                       deferred=not getattr(self, "eager_controlnet", False))
-        self.add_input("guidance", float)
-        self.add_output("velocity", TensorType())
-
-    def load(self, device: Any = None) -> Dict[str, Any]:
-        cfg = self.family.toy
-        params = init_mmdit(
-            jax.random.PRNGKey(stable_hash(self.model_id) % 2**31), cfg)
-        apply = jax.jit(
-            lambda p, lat, t, emb, res: mmdit_apply(p, cfg, lat, t, emb, res)
-        )
-        uses_cfg = self.family.uses_cfg
-
-        def _forward(p, lat, t, emb, res, guidance):
-            # one-pass CFG fused INSIDE the jit: cond+null stacked on the
-            # batch axis, so the whole step is a single host->device call
-            if uses_cfg:
-                return fused_cfg_velocity(
-                    lambda pp, l, tt, e, r: mmdit_apply(pp, cfg, l, tt, e, r),
-                    p, lat, t, emb, guidance, res)
-            return mmdit_apply(p, cfg, lat, t, emb, res)
-
-        return {"params": params, "apply": apply,
-                "forward": jax.jit(_forward), "cfg": cfg}
-
-    def fold_patches(
-        self,
-        components: Dict[str, Any],
-        patches: List[Model],
-        patch_components: List[Dict[str, Any]],
-    ) -> Dict[str, Any]:
-        """LoRA fold, done ONCE per (model, patch set) by the backend."""
-        params = components["params"]
-        for pc in patch_components:
-            params = fold_lora(params, pc["lora"])
-        return {**components, "params": params}
-
-    def _velocity(
-        self,
-        model_components: Dict[str, Any],
-        params: Dict[str, Any],
-        lat: jnp.ndarray,
-        t: jnp.ndarray,
-        emb: jnp.ndarray,
-        res: jnp.ndarray,
-        guidance: Any,
-    ) -> jnp.ndarray:
-        forward = model_components.get("forward")
-        g = jnp.asarray(np.broadcast_to(
-            np.asarray(guidance, np.float32), (lat.shape[0],)))
-        if forward is not None:
-            return forward(params, lat, t, emb, res, g)
-        # components loaded elsewhere: python-side one-pass CFG fallback
-        apply = model_components["apply"]
-        if self.family.uses_cfg:
-            return fused_cfg_velocity(apply, params, lat, t, emb, g, res)
-        return apply(params, lat, t, emb, res)
-
-    def _materialize_residuals(self, cfg: DiTConfig, kw: Dict[str, Any],
-                               lat: jnp.ndarray) -> jnp.ndarray:
-        res = kw.get("controlnet_residuals")
-        if res is None:
-            res = jnp.zeros(
-                (cfg.n_layers, lat.shape[0], cfg.image_tokens, cfg.d_model),
-                lat.dtype,
-            )
-        return res
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        cfg: DiTConfig = model_components["cfg"]
-        params = model_components["params"]
-        for patch in kw.get("_patches", []) or []:
-            # legacy direct-call path; the serving runtime folds via the
-            # backend's (model_id, patch_ids) cache instead
-            lora_params = patch.load()["lora"]
-            params = fold_lora(params, lora_params)
-        lat = kw["latents"]
-        emb = kw["prompt_embeds"]
-        t = jnp.full((lat.shape[0],), float(kw["t"]))
-        res = self._materialize_residuals(cfg, kw, lat)
-        v = self._velocity(model_components, params, lat, t, emb, res,
-                           float(kw.get("guidance", 4.5)))
-        return {"velocity": v}
-
-    def execute_batch(
-        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
-    ) -> List[Dict[str, Any]]:
-        """Stacked cross-request forward.  Batch axis is axis 0 for
-        latents/embeddings but axis 1 for the layer-major ControlNet
-        residual stacks; timesteps and guidance become per-item vectors."""
-        cfg: DiTConfig = model_components["cfg"]
-        params = model_components["params"]
-        patch_sets = [tuple(p.model_id for p in kw.get("_patches", []) or [])
-                      for kw in batch_kwargs]
-        if any(ps != patch_sets[0] for ps in patch_sets[1:]):
-            # mixed patch sets can't share one folded parameter set
-            # (the serving runtime never batches them — batch_key includes
-            # effective_patches — but direct callers might)
-            return self._execute_sequential(model_components, batch_kwargs)
-        for patch in batch_kwargs[0].get("_patches", []) or []:
-            params = fold_lora(params, patch.load()["lora"])
-        stacked = self._stack_batch(cfg, batch_kwargs)
-        if stacked is None:
-            return self._execute_sequential(model_components, batch_kwargs)
-        lat, emb, t, res, guidance, sizes = stacked
-        v = self._velocity(model_components, params, lat, t, emb, res, guidance)
-        return [{"velocity": chunk} for chunk in _split_rows(v, sizes)]
-
-    def _stack_batch(
-        self, cfg: DiTConfig, batch_kwargs: List[Dict[str, Any]]
-    ) -> Optional[Tuple]:
-        """Stack a cross-request batch: (lat, emb, t, res, guidance, sizes),
-        or None when shapes disagree and stacking would be unsound."""
-        lats = [kw["latents"] for kw in batch_kwargs]
-        embs = [kw["prompt_embeds"] for kw in batch_kwargs]
-        if (any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:])
-                or any(e.shape[1:] != embs[0].shape[1:] for e in embs[1:])):
-            return None
-        sizes = [int(l.shape[0]) for l in lats]
-        lat = jnp.concatenate(lats, axis=0)
-        emb = jnp.concatenate(embs, axis=0)
-        # per-item scalars become [B] vectors; built host-side in ONE
-        # transfer instead of B tiny device ops
-        t = jnp.asarray(np.repeat(
-            np.asarray([float(kw["t"]) for kw in batch_kwargs], np.float32),
-            sizes))
-        res = jnp.concatenate([
-            self._materialize_residuals(cfg, kw, l)
-            for kw, l in zip(batch_kwargs, lats)
-        ], axis=1)
-        guidance = np.repeat(
-            np.asarray([float(kw.get("guidance", 4.5))
-                        for kw in batch_kwargs], np.float32), sizes)
-        return lat, emb, t, res, guidance, sizes
-
-    def execute_batch_sharded(
-        self,
-        model_components: Dict[str, Any],
-        batch_kwargs: List[Dict[str, Any]],
-        mesh: Any,
-    ) -> Optional[List[Dict[str, Any]]]:
-        """Stacked forward as one SPMD program over the k-device submesh.
-
-        Two composition modes, chosen by shape:
-
-        * **latent/CFG-branch data parallelism** — the CFG pair is folded
-          onto the batch axis host-side (cond rows then null rows) and the
-          rows are sharded across the mesh: at k=2/B=1 the conditional and
-          unconditional branches run on different devices (the paper's
-          latent parallelism), at larger B whole requests spread out.
-          Per-item guidance stays a [B] vector applied after the gather,
-          so mixed guidance scales remain fusable.
-        * **sequence sharding** — when the row count does not divide by k
-          (e.g. one CFG pair on a k=4 submesh), the image tokens shard
-          instead (``mmdit_apply_seq_sharded``), with per-layer K/V
-          all-gathers keeping joint attention exact.
-
-        Returns None when neither mode fits (the backend falls back to the
-        single-device stacked forward).
-        """
-        import jax
-
-        if any(kw.get("_patches") for kw in batch_kwargs):
-            return None      # backend lifts uniform patches before us
-        cfg: DiTConfig = model_components["cfg"]
-        stacked = self._stack_batch(cfg, batch_kwargs)
-        if stacked is None:
-            return None
-        lat, emb, t, res, guidance, sizes = stacked
-        params = model_components["params"]
-        uses_cfg = self.family.uses_cfg
-        b = int(lat.shape[0])
-        if uses_cfg:     # fold CFG onto the batch axis before sharding
-            lat = jnp.concatenate([lat, lat], axis=0)
-            t = jnp.concatenate([t, t], axis=0)
-            emb = jnp.concatenate([emb, jnp.zeros_like(emb)], axis=0)
-            res = jnp.concatenate([res, res], axis=1)
-        k = mesh.size
-        axis = mesh.axis_names[0]
-        cache = _mesh_fn_cache(model_components)
-        if int(lat.shape[0]) % k == 0:
-            key = ("dp", mesh)
-            if key not in cache:
-                cache[key] = jax.jit(shard_map_compat(
-                    lambda p, l, tt, e, r: mmdit_apply(p, cfg, l, tt, e, r),
-                    mesh=mesh,
-                    in_specs=(P(), P(axis), P(axis), P(axis), P(None, axis)),
-                    out_specs=P(axis),
-                ))
-            v2 = cache[key](params,
-                            _mesh_put(lat, mesh, axis),
-                            _mesh_put(t, mesh, axis),
-                            _mesh_put(emb, mesh, axis),
-                            _mesh_put(res, mesh, None, axis))
-        elif seq_shard_divisor(cfg, k):
-            key = ("seq", mesh)
-            if key not in cache:
-                cache[key] = jax.jit(
-                    lambda p, l, tt, e, r: mmdit_apply_seq_sharded(
-                        p, cfg, l, tt, e, r, mesh))
-            v2 = cache[key](params,
-                            _mesh_put(lat, mesh, None, axis),
-                            _mesh_put(t, mesh),
-                            _mesh_put(emb, mesh),
-                            _mesh_put(res, mesh, None, None, axis))
-        else:
-            return None
-        if uses_cfg:
-            v_c, v_u = v2[:b], v2[b:]
-            g = jnp.asarray(guidance, v2.dtype)
-            g = g.reshape((b,) + (1,) * (v2.ndim - 1))
-            v = cfg_combine(v_u, v_c, g)
-        else:
-            v = v2
-        return [{"velocity": chunk} for chunk in _split_rows(v, sizes)]
-
-    def cost(self) -> ModelCost:
-        f = self.family
-        tokens = f.image_tokens + f.text_tokens
-        return ModelCost(
-            flops_per_item=f.backbone_step_flops(),
-            param_bytes=f.backbone_bytes(),
-            act_io_bytes=12.0 * f.n_layers_real * tokens * f.d_model_real * 2.0,
-            output_bytes=f.image_tokens * 16 * 2.0,
-            # k_max profiled for the sharded plane: 2x from the CFG/latent
-            # branch split, 2x more from batch-row or sequence sharding
-            max_parallelism=4,
-            max_batch=8,
-            calls_per_request=f.denoise_steps,
-        )
-
-
-class ControlNet(Model):
-    def __init__(self, family: DiffusionFamily, variant: int = 1) -> None:
-        self.family = family
-        self.variant = variant
-        super().__init__(model_id=f"controlnet{variant}:{family.name}")
-
-    def setup_io(self) -> None:
-        self.add_input("latents", TensorType())
-        self.add_input("cond_latents", TensorType())
-        self.add_input("prompt_embeds", TensorType())
-        self.add_input("t", float)
-        self.add_output("controlnet_residuals", TensorType())
-
-    def load(self, device: Any = None) -> Dict[str, Any]:
-        cfg = self.family.toy
-        params = init_controlnet(
-            jax.random.PRNGKey(stable_hash(self.model_id) % 2**31), cfg
-        )
-        apply = jax.jit(
-            lambda p, lat, cond, t, emb: controlnet_apply(p, cfg, lat, cond, t, emb)
-        )
-        return {"params": params, "apply": apply}
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        lat = kw["latents"]
-        t = jnp.full((lat.shape[0],), float(kw["t"]))
-        res = model_components["apply"](
-            model_components["params"], lat, kw["cond_latents"], t,
-            kw["prompt_embeds"],
-        )
-        return {"controlnet_residuals": res}
-
-    @staticmethod
-    def _stack_batch(batch_kwargs: List[Dict[str, Any]]) -> Optional[Tuple]:
-        """Stack a cross-request batch: (lat, cond, emb, t, sizes), or
-        None when latent shapes disagree and stacking would be unsound."""
-        lats = [kw["latents"] for kw in batch_kwargs]
-        if any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:]):
-            return None
-        sizes = [int(l.shape[0]) for l in lats]
-        lat = jnp.concatenate(lats, axis=0)
-        cond = jnp.concatenate([kw["cond_latents"] for kw in batch_kwargs], axis=0)
-        emb = jnp.concatenate([kw["prompt_embeds"] for kw in batch_kwargs], axis=0)
-        t = jnp.asarray(np.repeat(
-            np.asarray([float(kw["t"]) for kw in batch_kwargs], np.float32),
-            sizes))
-        return lat, cond, emb, t, sizes
-
-    def execute_batch(
-        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
-    ) -> List[Dict[str, Any]]:
-        stacked = self._stack_batch(batch_kwargs)
-        if stacked is None:
-            return self._execute_sequential(model_components, batch_kwargs)
-        lat, cond, emb, t, sizes = stacked
-        res = model_components["apply"](
-            model_components["params"], lat, cond, t, emb)
-        # residuals are layer-major [L, B, Ti, d]: batch axis is axis 1
-        return [{"controlnet_residuals": chunk}
-                for chunk in _split_rows(res, sizes, axis=1)]
-
-    def execute_batch_sharded(
-        self,
-        model_components: Dict[str, Any],
-        batch_kwargs: List[Dict[str, Any]],
-        mesh: Any,
-    ) -> Optional[List[Dict[str, Any]]]:
-        """Batch-axis data parallelism for the ControlNet branch: requests
-        shard across the submesh; the layer-major residual stack comes back
-        sharded on its batch axis (axis 1)."""
-        import jax
-
-        if any(kw.get("_patches") for kw in batch_kwargs):
-            return None
-        stacked = self._stack_batch(batch_kwargs)
-        if stacked is None:
-            return None
-        lat, cond, emb, t, sizes = stacked
-        if sum(sizes) % mesh.size:
-            return None
-        cfg = self.family.toy
-        axis = mesh.axis_names[0]
-        cache = _mesh_fn_cache(model_components)
-        key = ("cn", mesh)
-        if key not in cache:
-            cache[key] = jax.jit(shard_map_compat(
-                lambda p, l, cnd, tt, e: controlnet_apply(p, cfg, l, cnd, tt, e),
-                mesh=mesh,
-                in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
-                out_specs=P(None, axis),
-            ))
-        res = cache[key](model_components["params"],
-                         _mesh_put(lat, mesh, axis),
-                         _mesh_put(cond, mesh, axis),
-                         _mesh_put(t, mesh, axis),
-                         _mesh_put(emb, mesh, axis))
-        return [{"controlnet_residuals": chunk}
-                for chunk in _split_rows(res, sizes, axis=1)]
-
-    def cost(self) -> ModelCost:
-        f = self.family
-        return ModelCost(
-            flops_per_item=f.controlnet_step_flops(),
-            param_bytes=f.controlnet_bytes(),
-            act_io_bytes=6.0 * f.n_layers_real * (f.image_tokens + f.text_tokens)
-            * f.d_model_real,
-            output_bytes=f.controlnet_residual_bytes(),
-            max_parallelism=2,           # batch-axis data parallelism
-            max_batch=8,
-            calls_per_request=f.denoise_steps,
-        )
-
-
-class VAEDecode(Model):
-    def __init__(self, family: DiffusionFamily) -> None:
-        self.family = family
-        super().__init__(model_id=f"vae:{family.name}")
-
-    def setup_io(self) -> None:
-        self.add_input("latents", TensorType())
-        self.add_output("image", Image)
-
-    def load(self, device: Any = None) -> Dict[str, Any]:
-        cfg = self.family.toy
-        params = init_vae(
-            jax.random.PRNGKey(stable_hash(f"vae:{self.family.name}") % 2**31),
-            latent_channels=cfg.latent_channels,
-        )
-        return {
-            "params": params,
-            "decode": jax.jit(vae_decode),
-            "encode": jax.jit(vae_encode),
-        }
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        img = model_components["decode"](model_components["params"], kw["latents"])
-        return {"image": img}
-
-    def execute_batch(
-        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
-    ) -> List[Dict[str, Any]]:
-        lats = [kw["latents"] for kw in batch_kwargs]
-        if any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:]):
-            return self._execute_sequential(model_components, batch_kwargs)
-        sizes = [int(l.shape[0]) for l in lats]
-        img = model_components["decode"](
-            model_components["params"], jnp.concatenate(lats, axis=0))
-        return [{"image": chunk} for chunk in _split_rows(img, sizes)]
-
-    def execute_batch_sharded(
-        self,
-        model_components: Dict[str, Any],
-        batch_kwargs: List[Dict[str, Any]],
-        mesh: Any,
-    ) -> Optional[List[Dict[str, Any]]]:
-        """Replicated-weight parallel decode: the VAE params live on every
-        submesh device, latent rows shard across them."""
-        import jax
-
-        lats = [kw["latents"] for kw in batch_kwargs]
-        if any(l.shape[1:] != lats[0].shape[1:] for l in lats[1:]):
-            return None
-        sizes = [int(l.shape[0]) for l in lats]
-        if sum(sizes) % mesh.size:
-            return None
-        axis = mesh.axis_names[0]
-        # decode/encode share one components dict (same model_id), so the
-        # fn cache keys carry the op kind
-        cache = _mesh_fn_cache(model_components)
-        key = ("vae_dec", mesh)
-        if key not in cache:
-            cache[key] = jax.jit(shard_map_compat(
-                lambda p, l: vae_decode(p, l), mesh=mesh,
-                in_specs=(P(), P(axis)), out_specs=P(axis)))
-        img = cache[key](model_components["params"],
-                          _mesh_put(jnp.concatenate(lats, axis=0), mesh, axis))
-        return [{"image": chunk} for chunk in _split_rows(img, sizes)]
-
-    def cost(self) -> ModelCost:
-        f = self.family
-        return ModelCost(
-            flops_per_item=f.vae_decode_flops(),
-            param_bytes=f.vae_bytes(),
-            act_io_bytes=f.image_tokens * 64 * 48.0,
-            output_bytes=f.image_tokens * 64 * 3 * 1.0,   # uint8 pixels
-            max_parallelism=2,           # replicated-weight parallel decode
-            max_batch=16,
-        )
-
-
-class VAEEncode(Model):
-    """Reference-image encoder; shares the VAE weights (same model_id)."""
-
-    def __init__(self, family: DiffusionFamily) -> None:
-        self.family = family
-        super().__init__(model_id=f"vae:{family.name}")
-
-    def setup_io(self) -> None:
-        self.add_input("image", Image)
-        self.add_output("cond_latents", TensorType())
-
-    def load(self, device: Any = None) -> Dict[str, Any]:
-        return VAEDecode(self.family).load(device)
-
-    def _as_array(self, img: Any) -> jnp.ndarray:
-        if not hasattr(img, "shape"):   # toy stand-in for a PIL image
-            cfg = self.family.toy
-            img = jnp.zeros((1, cfg.latent_size * 8, cfg.latent_size * 8, 3))
-        return img
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        img = self._as_array(kw["image"])
-        lat = model_components["encode"](model_components["params"], img)
-        return {"cond_latents": lat}
-
-    def execute_batch(
-        self, model_components: Dict[str, Any], batch_kwargs: List[Dict[str, Any]]
-    ) -> List[Dict[str, Any]]:
-        imgs = [self._as_array(kw["image"]) for kw in batch_kwargs]
-        if any(i.shape[1:] != imgs[0].shape[1:] for i in imgs[1:]):
-            return self._execute_sequential(model_components, batch_kwargs)
-        sizes = [int(i.shape[0]) for i in imgs]
-        lat = model_components["encode"](
-            model_components["params"], jnp.concatenate(imgs, axis=0))
-        return [{"cond_latents": chunk} for chunk in _split_rows(lat, sizes)]
-
-    def execute_batch_sharded(
-        self,
-        model_components: Dict[str, Any],
-        batch_kwargs: List[Dict[str, Any]],
-        mesh: Any,
-    ) -> Optional[List[Dict[str, Any]]]:
-        """Replicated-weight parallel encode (mirror of VAEDecode)."""
-        import jax
-
-        imgs = [self._as_array(kw["image"]) for kw in batch_kwargs]
-        if any(i.shape[1:] != imgs[0].shape[1:] for i in imgs[1:]):
-            return None
-        sizes = [int(i.shape[0]) for i in imgs]
-        if sum(sizes) % mesh.size:
-            return None
-        axis = mesh.axis_names[0]
-        cache = _mesh_fn_cache(model_components)
-        key = ("vae_enc", mesh)
-        if key not in cache:
-            cache[key] = jax.jit(shard_map_compat(
-                lambda p, i: vae_encode(p, i), mesh=mesh,
-                in_specs=(P(), P(axis)), out_specs=P(axis)))
-        lat = cache[key](model_components["params"],
-                          _mesh_put(jnp.concatenate(imgs, axis=0), mesh, axis))
-        return [{"cond_latents": chunk} for chunk in _split_rows(lat, sizes)]
-
-    def cost(self) -> ModelCost:
-        c = VAEDecode(self.family).cost()
-        return ModelCost(c.flops_per_item, c.param_bytes, c.act_io_bytes,
-                         self.family.latent_bytes(),
-                         max_parallelism=c.max_parallelism, max_batch=16)
-
-
-class DenoiseStep(Model):
-    """Euler scheduler step — trivial arithmetic, runs inline."""
-
-    trivial = True
-
-    def __init__(self, family: DiffusionFamily) -> None:
-        self.family = family
-        super().__init__(model_id="denoise_step")
-
-    def setup_io(self) -> None:
-        self.add_input("velocity", TensorType())
-        self.add_input("latents", TensorType())
-        self.add_input("t_cur", float)
-        self.add_input("t_next", float)
-        self.add_output("latents", TensorType())
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        lat = denoise_step(
-            kw["latents"], kw["velocity"],
-            jnp.asarray(kw["t_cur"]), jnp.asarray(kw["t_next"]),
-        )
-        return {"latents": lat}
-
-    def cost(self) -> ModelCost:
-        return ModelCost(1e6, 0, 1e6, self.family.latent_bytes(), max_batch=64)
-
-
-class ResidualCombine(Model):
-    """Sum residual stacks from multiple ControlNets — trivial, inline."""
-
-    trivial = True
-
-    def __init__(self, family: DiffusionFamily) -> None:
-        self.family = family
-        super().__init__(model_id="residual_combine")
-
-    def setup_io(self) -> None:
-        self.add_input("a", TensorType())
-        self.add_input("b", TensorType())
-        self.add_output("controlnet_residuals", TensorType())
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        return {"controlnet_residuals": kw["a"] + kw["b"]}
-
-    def cost(self) -> ModelCost:
-        return ModelCost(1e6, 0, 1e6,
-                         self.family.controlnet_residual_bytes(), max_batch=64)
-
-
-class LoRAAdapter(Model):
-    """Weight-patching adapter (attached via ``backbone.add_patch``)."""
-
-    def __init__(self, family: DiffusionFamily, name: str = "style",
-                 rank: int = 8, param_bytes: float = 886 * 2**20) -> None:
-        self.family = family
-        self.rank = rank
-        self._param_bytes = param_bytes
-        super().__init__(model_id=f"lora:{name}:{family.name}")
-
-    def setup_io(self) -> None:
-        self.add_output("adapter_weights", TensorType())
-
-    def load(self, device: Any = None) -> Dict[str, Any]:
-        key = jax.random.PRNGKey(stable_hash(self.model_id) % 2**31)
-        lora = init_lora(key, self.family.toy, rank=self.rank)
-        return {"lora": randomize_lora(key, lora)}
-
-    def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
-        return {"adapter_weights": model_components["lora"]}
-
-    def cost(self) -> ModelCost:
-        return ModelCost(0, self._param_bytes, self._param_bytes,
-                         self._param_bytes, max_batch=1)
-
-
-# --------------------------------------------------------------------------
-# Workflow builders (Table 2)
-# --------------------------------------------------------------------------
-
-class ModelSet:
-    """Shared model instances for one family (sharing is by model_id)."""
-
-    def __init__(self, family: DiffusionFamily) -> None:
-        self.family = family
-        self.latents = LatentsGenerator(family)
-        self.text_enc = TextEncoder(family)
-        self.backbone = DiffusionBackbone(family)
-        self.cn1 = ControlNet(family, 1)
-        self.cn2 = ControlNet(family, 2)
-        self.vae_dec = VAEDecode(family)
-        self.vae_enc = VAEEncode(family)
-        self.denoise = DenoiseStep(family)
-        self.combine = ResidualCombine(family)
-
-
-def _denoising_loop(ms: ModelSet, wf, lat, emb, steps: int, guidance: float,
-                    controlnets: List[Model], cond_lat) -> Any:
-    sched = [float(x) for x in flow_schedule(steps)]
-    for i in range(steps):
-        t_cur, t_next = sched[i], sched[i + 1]
-        res = None
-        for cn in controlnets:
-            r = cn(lat, cond_lat, emb, t_cur)
-            res = r if res is None else ms.combine(res, r)
-        v = ms.backbone(
-            latents=lat, prompt_embeds=emb, t=t_cur,
-            controlnet_residuals=res, guidance=guidance,
-        )
-        lat = ms.denoise(v, lat, t_cur, t_next)
-    return lat
-
-
-def make_basic_workflow(family_name: str, ms: Optional[ModelSet] = None) -> WorkflowTemplate:
-    family = FAMILIES[family_name]
-    ms = ms or ModelSet(family)
-
-    @compose(f"{family.name}:basic")
-    def wf_fn(wf, steps=family.denoise_steps, guidance=4.5):
-        seed = wf.add_input("seed", int)
-        prompt = wf.add_input("prompt", str)
-        lat = ms.latents(seed)
-        emb = ms.text_enc(prompt)
-        lat = _denoising_loop(ms, wf, lat, emb, steps, guidance, [], None)
-        img = ms.vae_dec(lat)
-        wf.add_output(img, name="image")
-
-    return wf_fn
-
-
-def make_controlnet_workflow(
-    family_name: str, n_controlnets: int = 1, ms: Optional[ModelSet] = None
-) -> WorkflowTemplate:
-    family = FAMILIES[family_name]
-    ms = ms or ModelSet(family)
-    cns = [ms.cn1, ms.cn2][:n_controlnets]
-
-    @compose(f"{family.name}:cn{n_controlnets}")
-    def wf_fn(wf, steps=family.denoise_steps, guidance=4.5):
-        seed = wf.add_input("seed", int)
-        prompt = wf.add_input("prompt", str)
-        ref_image = wf.add_input("ref_image", Image)
-        lat = ms.latents(seed)
-        emb = ms.text_enc(prompt)
-        cond = ms.vae_enc(ref_image)
-        lat = _denoising_loop(ms, wf, lat, emb, steps, guidance, cns, cond)
-        img = ms.vae_dec(lat)
-        wf.add_output(img, name="image")
-
-    return wf_fn
-
-
-def make_lora_workflow(
-    family_name: str, lora_name: str = "style", ms: Optional[ModelSet] = None
-) -> WorkflowTemplate:
-    family = FAMILIES[family_name]
-    ms = ms or ModelSet(family)
-    # a fresh backbone instance so the patch does not leak into other
-    # workflows sharing the ModelSet (model_id stays identical -> shareable)
-    backbone = DiffusionBackbone(family)
-    lora = LoRAAdapter(family, lora_name)
-    backbone.add_patch(lora)
-    patched = ModelSet(family)
-    patched.backbone = backbone
-    patched.latents, patched.text_enc = ms.latents, ms.text_enc
-    patched.vae_dec, patched.denoise = ms.vae_dec, ms.denoise
-
-    @compose(f"{family.name}:lora:{lora_name}")
-    def wf_fn(wf, steps=family.denoise_steps, guidance=4.5):
-        seed = wf.add_input("seed", int)
-        prompt = wf.add_input("prompt", str)
-        lat = patched.latents(seed)
-        emb = patched.text_enc(prompt)
-        lat = _denoising_loop(patched, wf, lat, emb, steps, guidance, [], None)
-        img = patched.vae_dec(lat)
-        wf.add_output(img, name="image")
-
-    return wf_fn
-
-
-def table2_setting(setting: str) -> Dict[str, WorkflowTemplate]:
-    """S1-S6 from Table 2: per-family (Basic, +C.N.1, +C.N.2) workflows."""
-    singles = {"s1": ["sd3"], "s2": ["sd3.5-large"], "s3": ["flux-schnell"],
-               "s4": ["flux-dev"], "s5": ["sd3", "sd3.5-large"],
-               "s6": ["flux-schnell", "flux-dev"]}
-    fams = singles[setting.lower()]
-    out: Dict[str, WorkflowTemplate] = {}
-    for f in fams:
-        ms = ModelSet(FAMILIES[f])
-        basic = make_basic_workflow(f, ms)
-        cn1 = make_controlnet_workflow(f, 1, ms)
-        cn2 = make_controlnet_workflow(f, 2, ms)
-        out[basic.name] = basic
-        out[cn1.name] = cn1
-        out[cn2.name] = cn2
-    return out
+__all__ = [
+    "ControlNet",
+    "DenoiseSegment",
+    "DenoiseStep",
+    "DiffusionBackbone",
+    "LatentsGenerator",
+    "LoRAAdapter",
+    "ModelSet",
+    "ResidualCombine",
+    "TextEncoder",
+    "VAEDecode",
+    "VAEEncode",
+    "make_basic_workflow",
+    "make_controlnet_workflow",
+    "make_lora_workflow",
+    "table2_setting",
+]

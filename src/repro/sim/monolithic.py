@@ -26,7 +26,7 @@ import itertools
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.compiler import CompiledGraph
-from repro.core.profiles import ProfileStore
+from repro.core.profiles import ProfileStore, node_infer_time
 from repro.sim.metrics import RequestRecord
 
 
@@ -50,7 +50,9 @@ class WorkflowSpec:
             if n.attrs.get("inline") or n.attrs.get("io_only"):
                 continue
             p = profiles.profile_model(n.op)
-            serial += p.infer_time(1, 1)
+            # segment nodes carry their schedule length on the node, not
+            # the (model_id-shared) profile
+            serial += node_infer_time(profiles, n)
             model_ids[n.op.model_id] = p.param_bytes
             max_batch = min(max_batch, p.max_batch)
             for patch in n.op.patches:
@@ -65,7 +67,7 @@ class WorkflowSpec:
             for n in graph.nodes:
                 if n.attrs.get("inline") or n.attrs.get("io_only"):
                     continue
-                tot += profiles.profile_model(n.op).infer_time(b, 1)
+                tot += node_infer_time(profiles, n, batch=b)
             per_item[b] = tot
         return cls(
             name=graph.name,

@@ -266,13 +266,15 @@ def test_end_to_end_batched_matches_sequential():
 def test_one_forward_per_scheduled_batch():
     inputs = [{"seed": i, "prompt": "shared prompt"} for i in range(4)]
     _, sys_, backend = _run_plane(make_basic_workflow("sd3"), inputs, steps=2)
-    backbone_fwd = [n for mid, n in backend.forward_log if mid == "backbone:sd3"]
-    backbone_dispatches = [b for b in sys_.coordinator.dispatch_log
-                           if b.model_id == "backbone:sd3"]
-    # one backend forward per (model, ScheduledBatch), and the per-step
-    # batches stack all 4 requests into a single forward
-    assert len(backbone_fwd) == len(backbone_dispatches) == 2
-    assert backbone_fwd == [4, 4]
+    seg_fwd = [n for mid, n in backend.forward_log
+               if mid == "segment:backbone:sd3"]
+    seg_dispatches = [b for b in sys_.coordinator.dispatch_log
+                      if b.model_id == "segment:backbone:sd3"]
+    # one backend forward per (model, ScheduledBatch); the fused segment
+    # stacks all 4 requests AND both denoise steps into a single scan
+    assert len(seg_fwd) == len(seg_dispatches) == 1
+    assert seg_fwd == [4]
+    assert seg_dispatches[0].segment_steps == 2
     text_fwd = [n for mid, n in backend.forward_log if mid == "text_encoder:sd3"]
     assert sum(text_fwd) == 4
 

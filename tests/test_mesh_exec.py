@@ -255,13 +255,13 @@ def test_scheduled_k4_batch_executes_on_4_device_submesh():
             err = float(np.abs(a - b).max())
             assert err < 1e-4, err
         k4 = [d for d in sys_.coordinator.dispatch_log
-              if d.model_id == 'backbone:sd3']
+              if d.model_id == 'segment:backbone:sd3']
         assert k4 and all(d.parallelism == 4 for d in k4), k4
         for d in k4:
             assert len(set(d.executor_ids)) == 4
             devs = {backend.mesh_manager.device_of(e).id for e in d.executor_ids}
             assert len(devs) == 4, devs
-        assert any(s[0] == 'backbone:sd3' and s[2] == 4
+        assert any(s[0] == 'segment:backbone:sd3' and s[2] == 4
                    and len(set(s[3])) == 4 for s in backend.shard_log)
         print('OK', len(backend.shard_log))
     """, devices=8)
@@ -324,7 +324,7 @@ def test_controlnet_workflow_sharded_end_to_end():
             err = float(np.abs(a - b).max())
             assert err < 1e-4, err
         models = sorted({s[0] for s in backend.shard_log})
-        assert 'backbone:sd3' in models, models
+        assert 'segment:backbone:sd3+controlnet1:sd3' in models, models
         print('OK', models)
     """, devices=4)
     assert "OK" in out

@@ -45,12 +45,30 @@ def test_approx_cache_noop_without_hit_config():
 
 
 def test_async_lora_inserts_fetch_and_checks():
+    """Default pipeline: the fused segment node (which forwards the
+    backbone's patches) carries the readiness annotations."""
     wf = make_lora_workflow("sd3", "test-style")
     graph = GraphCompiler(default_passes()).compile(wf.instantiate(steps=4))
     fetches = [n for n in graph.nodes if isinstance(n.op, LoRAFetch)]
     assert len(fetches) == 1
     assert fetches[0].attrs.get("io_only")
-    for n in graph.nodes_of_model("backbone:sd3"):
+    patched = graph.nodes_of_model("segment:backbone:sd3")
+    assert patched, "denoise chain must fuse into one segment node"
+    for n in patched:
+        assert n.attrs.get("lora_check") == [fetches[0].id]
+        assert n.attrs.get("patch_ids") == [fetches[0].op.patch.model_id]
+
+
+def test_async_lora_annotates_unfused_backbone():
+    """Without SegmentFusion the per-step backbone nodes are annotated."""
+    wf = make_lora_workflow("sd3", "test-style2")
+    passes = [InlineTrivialPass(), AsyncLoRAPass(), JitCompilePass()]
+    graph = GraphCompiler(passes).compile(wf.instantiate(steps=4))
+    fetches = [n for n in graph.nodes if isinstance(n.op, LoRAFetch)]
+    assert len(fetches) == 1
+    backbones = graph.nodes_of_model("backbone:sd3")
+    assert len(backbones) == 4
+    for n in backbones:
         assert n.attrs.get("lora_check") == [fetches[0].id]
         assert n.attrs.get("patch_ids") == [fetches[0].op.patch.model_id]
 

@@ -35,6 +35,54 @@ def test_template_caches_per_static_key(toy_workflow):
     assert a is b and a is not c
 
 
+def test_template_unhashable_statics_fall_back_to_retrace(toy_models):
+    """List/dict-valued statics can't key the graph cache — instantiate
+    must re-trace uncached instead of crashing on the dict lookup."""
+    m = toy_models
+
+    @compose("toy_sched")
+    def wf_fn(wf, schedule=(0.5, 0.25)):
+        seed = wf.add_input("seed", int)
+        lat = m["latgen"](seed)
+        emb = m["enc"](wf.add_input("prompt", str))
+        for _ in schedule:
+            noise = m["backbone"](lat, emb, cn=None)
+            lat = m["denoise"](noise, lat)
+        wf.add_output(lat, name="out")
+
+    a = wf_fn.instantiate(schedule=[0.5, 0.25, 0.125])     # list: unhashable
+    b = wf_fn.instantiate(schedule=[0.5, 0.25, 0.125])
+    assert a is not b and len(a.nodes) == len(b.nodes)
+    assert wf_fn.uncached_traces == 2
+    c = wf_fn.instantiate(schedule=(0.5, 0.25, 0.125))     # tuple: cached
+    assert wf_fn.instantiate(schedule=(0.5, 0.25, 0.125)) is c
+    assert wf_fn.uncached_traces == 2
+
+
+def test_registry_unhashable_statics_fall_back(toy_models):
+    from repro.core import WorkflowRegistry
+
+    m = toy_models
+
+    @compose("toy_sched_reg")
+    def wf_fn(wf, schedule=(0.5,)):
+        seed = wf.add_input("seed", int)
+        lat = m["latgen"](seed)
+        for _ in schedule:
+            noise = m["backbone"](lat, m["enc"](wf.add_input("prompt", str)),
+                                  cn=None)
+            lat = m["denoise"](noise, lat)
+        wf.add_output(lat, name="out")
+
+    reg = WorkflowRegistry()
+    reg.register(wf_fn)
+    g1 = reg.instantiate("toy_sched_reg", schedule=[0.5, 0.25])  # unhashable
+    g2 = reg.instantiate("toy_sched_reg", schedule=[0.5, 0.25])
+    assert g1 is not g2 and len(g1.nodes) == len(g2.nodes)
+    g3 = reg.instantiate("toy_sched_reg", schedule=(0.5, 0.25))  # cached
+    assert reg.instantiate("toy_sched_reg", schedule=(0.5, 0.25)) is g3
+
+
 def test_call_outside_workflow_raises(toy_models):
     with pytest.raises(RuntimeError):
         toy_models["enc"]("prompt text")
