@@ -1,0 +1,178 @@
+"""Chaos plane: SLO attainment and recovery cost under injected faults.
+
+Runs the same sim-plane trace with the chaos plane off and on
+(deterministic seeded fault schedules — every arm replays bit-identically)
+and reports what fault tolerance costs:
+
+* ``chaos_ratio`` — attainment under "crash an executor every N batches,
+  revive after 0.5 s" relative to fault-free.  The acceptance bar is a
+  ratio >= 0.9 (within 10% of fault-free) at the default cadence.
+* a cadence sweep (crash every 20/10/5 batches) and a mixed-fault arm
+  (crashes + hangs + slow forwards + transient backend errors + lost
+  transfers) with the full recovery counters: timeouts, requeues,
+  transient/fetch retries, quarantines, shed/stranded requests.
+* an executable-plane recovery check: kill the lead executor halfway
+  through a segment chunk of a real SD3 run and verify the recovered
+  image is BIT-EXACT against the fault-free reference.
+* the serving-system invariants (exactly-once termination, no duplicate
+  commits, refcounts, no leaks) after every arm.
+
+CLI: ``python -m benchmarks.bench_chaos [--smoke]``; writes
+``BENCH_chaos.json`` at the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, Optional
+
+from benchmarks.common import emit, run_lego_trace
+from repro.core import FaultPlane, LocalBackend, Scheduler, ServingSystem
+from repro.diffusion import make_basic_workflow, table2_setting
+from repro.sim import check_invariants, generate_trace
+
+CHAOS_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_chaos.json")
+
+
+def _arm(workflows, trace, n_executors: int,
+         faults: Optional[FaultPlane]) -> Dict[str, Any]:
+    sys_ = run_lego_trace(workflows, trace, n_executors, slo_scale=3.0,
+                          faults=faults)
+    co = sys_.coordinator
+    errs = check_invariants(co)
+    return {
+        "attainment": sys_.slo_attainment(),
+        "p99_latency_s": co.p99_latency(),
+        "finished": len(co.finished),
+        "rejected": len(co.rejected),
+        "shed": len(co.shed),
+        "stranded": co.n_stranded,
+        "timeouts": co.n_timeouts,
+        "requeues": co.n_requeues,
+        "transient_retries": co.n_transient_retries,
+        "fetch_retries": co.engine.fetch_retries,
+        "quarantines": sum(e.n_quarantines for e in co.executors),
+        "revives": sum(e.n_revives for e in co.executors),
+        "faults_injected": faults.counts() if faults is not None else {},
+        "invariants_ok": not errs,
+        "invariant_errors": errs,
+    }
+
+
+def trace_study(smoke: bool = False) -> Dict[str, Any]:
+    """Fault-free vs chaos arms on one deterministic trace."""
+    workflows = table2_setting("s1")
+    duration = 30.0 if smoke else 120.0
+    n_executors = 8
+    trace = generate_trace(list(workflows), rate=1.2, duration=duration,
+                           cv=1.0, seed=7)
+    out: Dict[str, Any] = {"n_requests": len(trace)}
+
+    out["baseline"] = _arm(workflows, trace, n_executors, None)
+    base_att = out["baseline"]["attainment"]
+    emit("chaos_baseline", base_att * 100, f"n={len(trace)}")
+
+    # the acceptance arm, built through the REPRO_FAULTS grammar so the
+    # benchmark exercises the same spec path operators would use
+    spec = "crash_every=10,revive=0.5,seed=7"
+    out["crash_revive"] = _arm(workflows, trace, n_executors,
+                               FaultPlane.from_env(spec))
+    att = out["crash_revive"]["attainment"]
+    ratio = att / base_att if base_att else 0.0
+    out["chaos_ratio"] = ratio
+    out["within_10pct"] = ratio >= 0.9
+    emit("chaos_crash_revive", att * 100,
+         f"ratio={ratio:.3f};requeues={out['crash_revive']['requeues']}")
+
+    cadences = (20, 5) if not smoke else (5,)
+    sweep = {}
+    for every in cadences:
+        sweep[str(every)] = _arm(
+            workflows, trace, n_executors,
+            FaultPlane(seed=7, crash_every_batches=every, revive_after=0.5))
+        emit(f"chaos_cadence[every={every}]",
+             sweep[str(every)]["attainment"] * 100,
+             f"requeues={sweep[str(every)]['requeues']}")
+    out["cadence_sweep"] = sweep
+
+    out["mixed"] = _arm(workflows, trace, n_executors, FaultPlane(
+        seed=11, crash_p=0.01, revive_after=0.5, slow_p=0.03,
+        slow_factor=6.0, hang_p=0.01, transient_p=0.05, fetch_loss_p=0.05))
+    emit("chaos_mixed", out["mixed"]["attainment"] * 100,
+         f"timeouts={out['mixed']['timeouts']};"
+         f"transient_retries={out['mixed']['transient_retries']};"
+         f"fetch_retries={out['mixed']['fetch_retries']}")
+    return out
+
+
+def recovery_parity(steps: int = 5) -> Dict[str, Any]:
+    """Executable plane: crash the lead executor halfway through the
+    second segment chunk; the recovered image must be bit-exact."""
+    import numpy as np
+
+    def serve(faults):
+        sys_ = ServingSystem(n_executors=2, backend=LocalBackend(),
+                             faults=faults)
+        sys_.coordinator.scheduler = Scheduler(
+            sys_.profiles, use_declared_max_batch=True, segment_chunk=2)
+        wf = make_basic_workflow("sd3")
+        sys_.register(wf)
+        r = sys_.submit(wf.name, inputs={"seed": 0, "prompt": "chaos"},
+                        arrival=0.0, steps=steps)
+        sys_.run()
+        assert r.status == "done", r.status
+        img = np.asarray(sys_.coordinator.engine.value_of(
+            r.ref_key(r.graph.outputs["image"])))
+        return sys_, img
+
+    ref_sys, want = serve(None)
+    idxs = [i for i, d in enumerate(ref_sys.coordinator.dispatch_log)
+            if d.model_id.startswith("segment:")]
+    faults = FaultPlane(seed=0, crash_every_batches=idxs[1], max_crashes=1)
+    sys_, got = serve(faults)
+    errs = check_invariants(sys_.coordinator)
+    bitexact = bool(np.array_equal(got, want))
+    out = {
+        "bitexact": bitexact,
+        "crashes": faults.n_crashes,
+        "requeues": sys_.coordinator.n_requeues,
+        "invariants_ok": not errs,
+        "invariant_errors": errs,
+    }
+    emit("chaos_recovery_bitexact", float(bitexact),
+         f"crashes={faults.n_crashes};requeues={out['requeues']}")
+    return out
+
+
+def run(smoke: bool = False) -> Dict[str, Any]:
+    result = {
+        "trace": trace_study(smoke=smoke),
+        "recovery": recovery_parity(steps=3 if smoke else 5),
+    }
+    with open(CHAOS_JSON, "w") as f:
+        json.dump(result, f, indent=2)
+    ok = (result["trace"]["within_10pct"]
+          and result["recovery"]["bitexact"]
+          and result["trace"]["baseline"]["invariants_ok"]
+          and result["trace"]["crash_revive"]["invariants_ok"]
+          and result["trace"]["mixed"]["invariants_ok"]
+          and result["recovery"]["invariants_ok"])
+    emit("chaos_acceptance", float(ok),
+         f"ratio={result['trace']['chaos_ratio']:.3f};"
+         f"bitexact={result['recovery']['bitexact']}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace, single cadence (CI liveness)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -45,10 +45,15 @@ def build_lego(
     scheduler_kwargs: Optional[Dict[str, Any]] = None,
     autoscaler: Any = None,
     reserve_executors: int = 0,
+    faults: Any = None,
+    retry_policy: Any = None,
+    replicate_segments: bool = False,
 ) -> ServingSystem:
     sys_ = ServingSystem(
         n_executors=n_executors, admission_enabled=admission, scheduler=scheduler,
         autoscaler=autoscaler, reserve_executors=reserve_executors,
+        faults=faults, retry_policy=retry_policy,
+        replicate_segments=replicate_segments,
     )
     if scheduler_kwargs:
         sys_.coordinator.scheduler = Scheduler(sys_.profiles, **scheduler_kwargs)
@@ -83,10 +88,15 @@ def run_lego_trace(
     solo: Optional[Dict[str, float]] = None,
     autoscaler: Any = None,
     reserve_executors: int = 0,
+    faults: Any = None,
+    retry_policy: Any = None,
+    replicate_segments: bool = False,
 ) -> ServingSystem:
     sys_ = build_lego(workflows, n_executors, admission, scheduler,
                       scheduler_kwargs, autoscaler=autoscaler,
-                      reserve_executors=reserve_executors)
+                      reserve_executors=reserve_executors, faults=faults,
+                      retry_policy=retry_policy,
+                      replicate_segments=replicate_segments)
     solo = solo or canonical_solo(workflows)
     for tr in trace:
         sys_.submit(

@@ -17,6 +17,7 @@ from benchmarks import (
     bench_async_lora,
     bench_burst,
     bench_caching,
+    bench_chaos,
     bench_datafetch,
     bench_latency_throughput,
     bench_overhead,
@@ -46,6 +47,7 @@ ALL = [
     ("s74_caching", bench_caching),
     ("s74_async_lora", bench_async_lora),
     ("s75_overhead", bench_overhead),
+    ("s6_chaos", bench_chaos),
     ("roofline", roofline),
 ]
 

@@ -13,6 +13,13 @@ from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScaleAction
 from repro.core.compiler import CompiledGraph, CompileError, GraphCompiler, Pass
 from repro.core.datastore import DataEngine, FetchFuture
 from repro.core.executor import Executor, LocalBackend, OutOfMemory, ShardedBackend
+from repro.core.faults import (
+    DataFetchError,
+    FaultPlane,
+    InjectedFault,
+    RetryPolicy,
+    TransientBackendError,
+)
 from repro.core.mesh import MeshManager, sharded_exec_enabled
 from repro.core.model import Model, ModelCost
 from repro.core.passes import (

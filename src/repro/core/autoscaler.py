@@ -124,9 +124,19 @@ class Autoscaler:
         # rejections ARE the demand signal (attributed to the request's
         # constituent models, weighted by their serial seconds)
         self.rejections: Deque[Tuple[float, Tuple[str, ...]]] = deque()
+        self.n_quarantine_signals: int = 0
 
     def note_rejection(self, now: float, model_ids: Sequence[str]) -> None:
         self.rejections.append((now, tuple(model_ids)))
+
+    def note_quarantine(self, now: float, model_ids: Sequence[str]) -> None:
+        """A flapping executor was drained (chaos plane): the models it
+        served lost capacity without their queues shrinking.  Feed the
+        drained residents into the rejection-pressure window so the next
+        tick re-provisions the group on healthy/reserve executors."""
+        if model_ids:
+            self.rejections.append((now, tuple(model_ids)))
+            self.n_quarantine_signals += 1
 
     def _rejection_pressure(self, now: float) -> Dict[str, float]:
         """Serial-seconds of rejected work per model over the window."""

@@ -67,6 +67,20 @@ class DataEngine:
         self.bytes_transferred: float = 0.0
         self.num_transfers: int = 0
         self.num_local_hits: int = 0
+        # chaos plane (both set by the Coordinator when chaos is on):
+        # a FaultPlane that may lose transfers in flight, and the retry
+        # budget before a fetch is declared unrecoverable
+        self.faults: Any = None
+        self.max_fetch_retries: int = 3
+        # hardening/invariant accounting
+        self.fetch_retries: int = 0     # lost transfers that were retried
+        self.failed_fetches: int = 0    # fetches lost past the budget
+        self.duplicate_puts: int = 0    # puts over a LIVE key (dup commit)
+        self.min_refcount_seen: int = 0  # most negative refcount observed
+        # first-touch fetch order: fault draws hash this index instead of
+        # the raw key, so replay is exact even when key strings embed
+        # process-global node ids
+        self._fetch_sites: Dict[str, int] = {}
 
     # --------------------------------------------------------------- puts
     def put(
@@ -77,11 +91,23 @@ class DataEngine:
         value: Any = None,
         producer_node: Optional[str] = None,
         refcount: int = 0,
+        replicate_to: Optional[int] = None,
     ) -> StoredValue:
+        """Store a value.  ``replicate_to`` places a second synchronous
+        copy (replicate-on-commit: survives a single executor loss, so
+        recovery replays a chunk instead of a whole lineage chain)."""
+        if key in self._store:
+            # immutable-value contract: a live key is never re-committed
+            self.duplicate_puts += 1
+        placements = {executor_id} if executor_id is not None else set()
+        if replicate_to is not None and replicate_to != executor_id:
+            placements.add(replicate_to)
+            self.bytes_transferred += int(nbytes)
+            self.num_transfers += 1
         sv = StoredValue(
             key=key,
             nbytes=int(nbytes),
-            placements={executor_id} if executor_id is not None else set(),
+            placements=placements,
             producer_node=producer_node,
             refcount=refcount,
             value=value,
@@ -111,12 +137,38 @@ class DataEngine:
         return self.profiles.transfer_time(sv.nbytes, cross_pod=cross_pod)
 
     def fetch(self, key: str, to_executor: int) -> float:
-        """Perform (account) the fetch; returns modeled seconds."""
+        """Perform (account) the fetch; returns modeled seconds.
+
+        With a chaos plane attached, a transfer may be lost in flight;
+        the engine retries (each attempt pays the transfer again) up to
+        ``max_fetch_retries``.  A fetch lost past the budget drops the
+        key entirely and raises
+        :class:`~repro.core.faults.DataFetchError` carrying the lineage,
+        so the coordinator can re-execute the producer."""
         sv = self._store[key]
         if to_executor in sv.placements or not sv.placements:
             self.num_local_hits += 1
             return 0.0
-        cost = self.fetch_cost(key, to_executor)
+        cost = 0.0
+        attempt = 0
+        site = None
+        if self.faults is not None:
+            site = f"k{self._fetch_sites.setdefault(key, len(self._fetch_sites))}"
+        while True:
+            attempt += 1
+            cost += self.fetch_cost(key, to_executor)
+            if self.faults is None or not self.faults.fetch_lost(key, attempt, site):
+                break
+            if attempt > self.max_fetch_retries:
+                # unrecoverable in transit: surface as a lost value so
+                # lineage re-execution kicks in
+                from repro.core.faults import DataFetchError
+
+                self.failed_fetches += 1
+                lineage = sv.producer_node
+                del self._store[key]
+                raise DataFetchError(key, lineage)
+            self.fetch_retries += 1
         sv.placements.add(to_executor)
         self.bytes_transferred += sv.nbytes
         self.num_transfers += 1
@@ -142,6 +194,10 @@ class DataEngine:
         if sv is None:
             return
         sv.refcount -= 1
+        if sv.refcount < self.min_refcount_seen:
+            # a value released more often than it was referenced — the
+            # invariant checker reads this watermark
+            self.min_refcount_seen = sv.refcount
         if sv.refcount <= 0:
             del self._store[key]
 

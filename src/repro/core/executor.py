@@ -17,8 +17,8 @@ Two backends share this class:
 from __future__ import annotations
 
 import time as _time
-from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict, deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.model import Model
 from repro.core.profiles import ProfileStore
@@ -31,12 +31,16 @@ from repro.core.profiles import ProfileStore
 # PROVISIONING  acquired for a model, waiting for the warm-up to start;
 # WARMING       streaming the target model's weights host->HBM;
 # SERVING       schedulable (the only state the Scheduler scores);
-# DRAINING      finishing its current batch, then retires/unassigns.
+# DRAINING      finishing its current batch, then retires/unassigns;
+# QUARANTINE    flapping (too many failure marks in a window) — drained,
+#               invisible to placement, re-provisioned cold after a
+#               cooldown (chaos-plane hardening).
 RESERVE = "reserve"
 PROVISIONING = "provisioning"
 WARMING = "warming"
 SERVING = "serving"
 DRAINING = "draining"
+QUARANTINE = "quarantine"
 
 
 class OutOfMemory(RuntimeError):
@@ -72,6 +76,13 @@ class Executor:
         self.models_loaded_count: int = 0
         self.bytes_loaded: float = 0.0
         self.scale_events: int = 0
+        # failure/chaos accounting: timestamps of recent failure marks
+        # (timeouts, transient exhaustion, crashes) for the flapping-
+        # executor quarantine window
+        self.failure_times: Deque[float] = deque()
+        self.n_failures: int = 0
+        self.n_quarantines: int = 0
+        self.n_revives: int = 0
 
     # ------------------------------------------------------------- memory
     @property
@@ -179,12 +190,59 @@ class Executor:
         self.busy_time += duration
         return self.busy_until
 
+    def cancel(self, now: float) -> float:
+        """Cancel a runaway (hung/timed-out) forward: free the executor
+        now and give the unspent seconds back to the busy accounting.
+        Returns the reclaimed seconds."""
+        reclaimed = max(0.0, self.busy_until - now)
+        self.busy_time = max(0.0, self.busy_time - reclaimed)
+        self.busy_until = min(self.busy_until, now)
+        return reclaimed
+
     def fail(self) -> None:
         self.alive = False
         self.loaded.clear()
         self.patch_state.clear()
         self.assigned_models.clear()
         self.warming_model = None
+
+    def revive(self, now: float) -> None:
+        """Process restart after a crash: back to service with cold
+        caches (``fail()`` already dropped all device state)."""
+        self.alive = True
+        self.state = SERVING
+        self.busy_until = now
+        self.n_revives += 1
+
+    # ----------------------------------------------------------- quarantine
+    def note_failure(self, now: float, window: float) -> int:
+        """Record one failure mark (timeout / transient exhaustion /
+        crash); returns the number of marks inside ``window``."""
+        self.n_failures += 1
+        self.failure_times.append(now)
+        horizon = now - window
+        while self.failure_times and self.failure_times[0] < horizon:
+            self.failure_times.popleft()
+        return len(self.failure_times)
+
+    def begin_quarantine(self) -> None:
+        """Drain a flapping executor: drop residents, leave placement."""
+        self.state = QUARANTINE
+        self.loaded.clear()
+        self.patch_state.clear()
+        self.assigned_models.clear()
+        self.warming_model = None
+        self.n_quarantines += 1
+        self.scale_events += 1
+
+    def release_quarantine(self) -> None:
+        """Cooldown over: re-provision cold.  Reserve-born executors give
+        the device back to the pool; fixed-fleet ones return to service
+        (empty caches — the warm-pool/LRU machinery refills them)."""
+        assert self.state == QUARANTINE, self.state
+        self.failure_times.clear()
+        self.state = RESERVE if self.reserve_born else SERVING
+        self.scale_events += 1
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (
@@ -216,6 +274,27 @@ class LocalBackend:
         # cumulative measured device seconds (load folds + executes):
         # lets callers separate control-plane overhead from real compute
         self.exec_seconds: float = 0.0
+        # chaos-plane hook: [attempts_so_far, attempts_that_must_fail] —
+        # set by the coordinator per dispatch when its FaultPlane injects
+        # a transient backend error; the error is raised HERE, before any
+        # device work, so the retry path exercises the real call boundary
+        self.chaos_attempts: Optional[List[int]] = None
+        self.n_injected_errors: int = 0
+
+    def _maybe_inject_fault(self) -> None:
+        if self.chaos_attempts is None:
+            return
+        self.chaos_attempts[0] += 1
+        if self.chaos_attempts[0] <= self.chaos_attempts[1]:
+            from repro.core.faults import TransientBackendError
+
+            self.n_injected_errors += 1
+            raise TransientBackendError(
+                f"injected transient backend error "
+                f"(attempt {self.chaos_attempts[0]})")
+        # decision consumed: nested delegations (ShardedBackend fallback
+        # -> LocalBackend) must not re-draw for the same logical call
+        self.chaos_attempts = None
 
     def ensure_loaded(self, model: Model) -> Tuple[Dict[str, Any], float]:
         """Returns (components, measured load seconds — 0 if cached)."""
@@ -270,6 +349,7 @@ class LocalBackend:
             pass  # non-jax payloads (plain python values) need no sync
 
     def execute(self, model: Model, **kwargs: Any) -> Tuple[Dict[str, Any], float]:
+        self._maybe_inject_fault()
         patches = kwargs.pop("_patches", None) or []
         comps, load_dt = self.components_for(model, patches)
         t0 = _time.perf_counter()
@@ -313,6 +393,7 @@ class LocalBackend:
     ) -> Tuple[List[Dict[str, Any]], float, float]:
         """One stacked forward for a whole ScheduledBatch.  Returns
         (per-request outputs, load seconds, execute seconds)."""
+        self._maybe_inject_fault()
         patches, clean, _ = self._lift_patches(batch_kwargs, patches)
         comps, load_dt = self.components_for(model, patches)
         model._batch_was_stacked = True
@@ -406,6 +487,7 @@ class ShardedBackend(LocalBackend):
     ) -> Tuple[List[Dict[str, Any]], float, float]:
         """Sharded stacked forward when ``mesh`` spans >1 device, else the
         inherited single-device path."""
+        self._maybe_inject_fault()
         if (mesh is None or not self.enabled
                 or getattr(mesh, "size", 1) <= 1):
             return super().execute_batch(model, batch_kwargs, patches)

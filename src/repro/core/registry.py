@@ -13,6 +13,7 @@ from repro.core.admission import AdmissionController
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig
 from repro.core.compiler import CompiledGraph, GraphCompiler, Pass
 from repro.core.executor import RESERVE, Executor, LocalBackend
+from repro.core.faults import FaultPlane, RetryPolicy
 from repro.core.passes import default_passes
 from repro.core.profiles import GPU_H800, HardwareSpec, ProfileStore
 from repro.core.runtime import Coordinator, Request
@@ -59,12 +60,22 @@ class ServingSystem:
         executor_memory: Optional[float] = None,
         autoscaler: Any = None,
         reserve_executors: int = 0,
+        faults: Optional[FaultPlane] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        replicate_segments: bool = False,
     ) -> None:
         """``autoscaler`` enables per-model elastic scaling: pass ``True``
         for the default policy, an :class:`AutoscalerConfig`, or a built
         :class:`Autoscaler`.  ``reserve_executors`` adds that many cold
         standby devices the autoscaler may bring into service (they are
-        never scheduled while in reserve)."""
+        never scheduled while in reserve).
+
+        Chaos/hardening: ``faults`` attaches a deterministic
+        :class:`~repro.core.faults.FaultPlane` (defaults to whatever the
+        ``REPRO_FAULTS`` environment variable specifies), ``retry_policy``
+        overrides the timeout/backoff/quarantine knobs, and
+        ``replicate_segments`` turns on replicate-on-commit for fused
+        denoise-segment state."""
         self.profiles = ProfileStore(hw)
         passes = default_passes()
         if extra_passes:
@@ -98,6 +109,9 @@ class ServingSystem:
             admission=AdmissionController(self.profiles, enabled=admission_enabled),
             backend=backend,
             autoscaler=asc,
+            faults=faults,
+            retry_policy=retry_policy,
+            replicate_segments=replicate_segments,
         )
 
     # ---------------------------------------------------------------- API

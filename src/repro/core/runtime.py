@@ -16,6 +16,12 @@ The same coordinator drives both planes:
 Fault tolerance follows the paper: intermediate data is immutable with
 recorded lineage, so on executor failure the coordinator re-executes the
 producing nodes of lost values and requeues whatever was running there.
+The chaos plane (:mod:`repro.core.faults`, gated by ``REPRO_FAULTS``)
+makes those failure semantics testable: deterministic injected crashes,
+hung/slow forwards, transient backend errors and datastore fetch losses,
+answered by per-batch timeouts, capped-backoff retries with a bounded
+budget (exhaustion sheds the request exactly once), flapping-executor
+quarantine, and opt-in replication of committed segment state.
 """
 
 from __future__ import annotations
@@ -32,6 +38,7 @@ from repro.core.datastore import DataEngine
 from repro.core.executor import (
     DRAINING,
     PROVISIONING,
+    QUARANTINE,
     RESERVE,
     SERVING,
     WARMING,
@@ -39,11 +46,18 @@ from repro.core.executor import (
     LocalBackend,
     ShardedBackend,
 )
+from repro.core.faults import (
+    DataFetchError,
+    FaultPlane,
+    RetryPolicy,
+    TransientBackendError,
+)
 from repro.core.profiles import ProfileStore, node_infer_time
 from repro.core.scheduler import ScheduledBatch, Scheduler
 from repro.core.types import ValueRef, nbytes_of
 
 PENDING, READY, RUNNING, AWAITING, DONE = "pending", "ready", "running", "awaiting", "done"
+SHED = "shed"   # terminal: the node's request was shed (retry budget/strand)
 
 _seq = itertools.count()
 
@@ -55,6 +69,7 @@ class RequestNode:
         "request", "node", "uid", "state", "pending_eager", "deferred_arrivals",
         "own_done_time", "executor_ids", "seq", "infer_est", "dispatch_time",
         "ready_since", "seg_done", "seg_state", "seg_pending",
+        "retries", "dispatch_seq", "seg_commit",
     )
 
     def __init__(self, request: "Request", node: Any, infer_est: float) -> None:
@@ -77,6 +92,13 @@ class RequestNode:
         self.seg_done: int = 0
         self.seg_state: Optional[Any] = None
         self.seg_pending: Optional[Any] = None
+        # hardening: requeue count against the retry budget, a dispatch
+        # epoch so stale batch_done/timeout events can't act on a node
+        # that was requeued and re-dispatched since, and the key/steps of
+        # the last replicated segment commit (replicate-on-commit)
+        self.retries: int = 0
+        self.dispatch_seq: int = 0
+        self.seg_commit: Optional[Tuple[str, int]] = None
 
     # ---- scheduling views -------------------------------------------------
     @property
@@ -213,6 +235,9 @@ class Coordinator:
         admission: Optional[AdmissionController] = None,
         backend: Optional[LocalBackend] = None,
         autoscaler: Optional[Autoscaler] = None,
+        faults: Optional[FaultPlane] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        replicate_segments: bool = False,
     ) -> None:
         self.executors = executors
         self.by_id = {e.id: e for e in executors}
@@ -243,6 +268,23 @@ class Coordinator:
         self.control_plane_time = 0.0     # wall seconds spent in handlers
         self.dispatch_log: List[ScheduledBatch] = []
         self._adapters_cached: set = set()
+        # ------------------------------------------------- chaos/hardening
+        # With no FaultPlane (explicit or via REPRO_FAULTS) the hardening
+        # machinery is fully dormant: no timeout events, no backoff, no
+        # quarantine — the default timeline is byte-identical to before.
+        self.faults = faults if faults is not None else FaultPlane.from_env()
+        self.retry = retry_policy or RetryPolicy()
+        self.replicate_segments = replicate_segments
+        self.engine.faults = self.faults
+        self.engine.max_fetch_retries = self.retry.max_fetch_retries
+        self.shed: List[Request] = []     # requests shed past retry budget
+        self.n_submitted = 0
+        self.n_timeouts = 0
+        self.n_transient_retries = 0
+        self.n_requeues = 0
+        self.n_stranded = 0               # inflight shed at drained loop
+        self._batch_index = 0             # dispatch counter (fault schedule)
+        self._crashes_seeded = False
 
     # ----------------------------------------------------------- frontend
     def submit(
@@ -255,6 +297,7 @@ class Coordinator:
         rid = next(self._rid)
         req = Request(rid, graph, inputs or {}, arrival if arrival is not None else self.now,
                       slo_seconds, self.profiles)
+        self.n_submitted += 1
         self._push(req.arrival, "arrival", req)
         return req
 
@@ -266,6 +309,11 @@ class Coordinator:
         heapq.heappush(self.events, (t, next(self._ecount), kind, payload))
 
     def run(self, until: Optional[float] = None) -> None:
+        if self.faults is not None and not self._crashes_seeded:
+            # explicit virtual-time crash schedule from the fault plane
+            self._crashes_seeded = True
+            for t_crash, eid in self.faults.crash_at:
+                self._push(t_crash, "executor_fail", eid)
         if self.autoscaler is not None and not self._tick_scheduled and self.events:
             # anchor the control loop at the first event of this run
             self._tick_scheduled = True
@@ -282,6 +330,15 @@ class Coordinator:
                 self._last_activity = self.now
             self._schedule_cycle()
             self.control_plane_time += _time.perf_counter() - t0
+        if (until is None and self.faults is not None and not self.events
+                and self.inflight):
+            # run-to-completion with chaos on: the loop drained with work
+            # still inflight (e.g. every executor died and nothing will
+            # revive).  Terminate those requests exactly once as shed so
+            # the exactly-once invariant holds; n_stranded exposes it.
+            for req in list(self.inflight.values()):
+                self.n_stranded += 1
+                self._shed_request(req)
 
     # -------------------------------------------------------------- events
     def _on_arrival(self, req: Request) -> None:
@@ -317,10 +374,19 @@ class Coordinator:
         self._complete_node(rnode, self.now)
 
     def _on_batch_done(self, record: Dict[str, Any]) -> None:
+        if record.get("done"):
+            return  # the paired timeout already reclaimed this batch
+        record["done"] = True
         batch: ScheduledBatch = record["batch"]
+        seqs = record.get("seqs")
         for rnode in batch.nodes:
             if rnode.state != RUNNING:
                 continue  # e.g. requeued after executor failure
+            if seqs is not None and seqs.get(rnode.uid) != rnode.dispatch_seq:
+                # stale epoch: the node was requeued (executor failure or
+                # timeout) and re-dispatched since this event was pushed —
+                # completing it here would double-apply under the wrong batch
+                continue
             if rnode.segment_total and self._advance_segment(rnode, batch):
                 continue  # chunk committed; steps remain — re-chunked
             rnode.own_done_time = self.now
@@ -340,6 +406,8 @@ class Coordinator:
                 rnode.request.output_values[rnode.uid] = out
             else:
                 rnode.seg_state = out.get("latents")
+                if self.replicate_segments:
+                    self._commit_segment_state(rnode)
         if finished:
             return False
         rnode.state = READY
@@ -349,24 +417,56 @@ class Coordinator:
         self.ready.append(rnode)
         return True
 
+    def _commit_segment_state(self, rnode: RequestNode) -> None:
+        """Replicate-on-commit (opt-in): place the committed carried
+        latent in the data store with a synchronous second copy on
+        another serving executor.  Losing the lead executor then costs a
+        re-run of the *uncommitted chunk only* — `_reexecute` resumes
+        from the latest surviving commit instead of replaying the whole
+        denoise chain from its inputs."""
+        if rnode.seg_state is None or not rnode.executor_ids:
+            return
+        req = rnode.request
+        lead = rnode.executor_ids[0]
+        backup = next((e.id for e in self.executors
+                       if e.is_serving and e.id != lead), None)
+        key = f"r{req.rid}:n{rnode.node.id}:segc:{rnode.seg_done}"
+        old = rnode.seg_commit
+        self.engine.put(key, executor_id=lead, nbytes=nbytes_of(rnode.seg_state),
+                        value=rnode.seg_state, refcount=1, replicate_to=backup)
+        rnode.seg_commit = (key, rnode.seg_done)
+        if old is not None:
+            self._drop_key(old[0])  # superseded commit
+
+    def _drop_key(self, key: str) -> None:
+        if self.engine.exists(key):
+            # force-drop: one reference left, released now (going through
+            # release() keeps the refcount watermark invariant clean)
+            self.engine.get(key).refcount = 1
+            self.engine.release(key)
+
     def _on_node_late_complete(self, rnode: RequestNode) -> None:
         if rnode.state in (RUNNING, AWAITING):
             self._complete_node(rnode, self.now)
 
     def _on_executor_fail(self, executor_id: int) -> None:
         ex = self.by_id[executor_id]
+        if not ex.alive:
+            return  # double fail event (e.g. crash_at + crash_every collide)
         ex.fail()
-        # requeue nodes that were running there
-        for req in self.inflight.values():
-            for rn in req.nodes.values():
-                if rn.state in (RUNNING, AWAITING) and executor_id in rn.executor_ids:
-                    rn.state = READY
-                    rn.executor_ids = []
-                    rn.own_done_time = None
-                    rn.ready_since = self.now
-                    rn.seg_pending = None    # uncommitted chunk re-runs
-                    if not rn.node.attrs.get("inline") and not rn.node.attrs.get("io_only"):
-                        self.ready.append(rn)
+        if self.faults is not None:
+            ex.note_failure(self.now, self.retry.quarantine_window)
+            if self.faults.revive_after is not None:
+                self._push(self.now + self.faults.revive_after,
+                           "executor_revive", executor_id)
+        self._log_fleet()
+        # requeue nodes that were running there (with chaos on, the
+        # requeue counts against the retry budget and backs off)
+        victims = [
+            rn for req in self.inflight.values() for rn in req.nodes.values()
+            if rn.state in (RUNNING, AWAITING) and executor_id in rn.executor_ids
+        ]
+        self._requeue_nodes(victims, count_retry=self.faults is not None)
         # lineage-based recovery of lost values
         lost = self.engine.executor_lost(executor_id)
         for key, lineage in lost:
@@ -377,6 +477,47 @@ class Coordinator:
             if req is None:
                 continue
             self._reexecute(req.nodes[int(nid_s)])
+        if lost:
+            # READY nodes may have lost an eager input whose producer ran
+            # on a *different* failed executor — dispatching them would
+            # read a missing key.  Send them back to PENDING and rebuild.
+            self._rescue_ready_nodes({key for key, _ in lost})
+
+    def _on_executor_revive(self, executor_id: int) -> None:
+        """Process restart ``revive_after`` seconds after a crash: the
+        executor rejoins with cold caches.  A crash-looping executor
+        (enough failure marks still inside the window) goes straight to
+        quarantine instead of flapping back into the dispatch pool."""
+        ex = self.by_id[executor_id]
+        if ex.alive:
+            return
+        ex.revive(self.now)
+        self._log_fleet()
+        self._maybe_quarantine(ex)
+
+    def _rescue_ready_nodes(self, lost_keys: set) -> None:
+        for req in self.inflight.values():
+            for rn in req.nodes.values():
+                if rn.state != READY:
+                    continue
+                missing = [ref for ref in rn.node.eager_input_refs()
+                           if req.ref_key(ref) in lost_keys
+                           and not self.engine.exists(req.ref_key(ref))]
+                if not missing:
+                    continue
+                rn.state = PENDING
+                rn.ready_since = None
+                if rn in self.ready:
+                    self.ready.remove(rn)
+                rn.pending_eager = sum(
+                    1 for ref in rn.node.eager_input_refs()
+                    if ref.producer is not None
+                    and not self.engine.exists(req.ref_key(ref)))
+                for ref in missing:
+                    if ref.producer is not None:
+                        self._reexecute(req.nodes[ref.producer])
+                if rn.pending_eager == 0:
+                    self._node_ready(rn)
 
     def _reexecute(self, rnode: RequestNode) -> None:
         """Reset a DONE node (and missing ancestors) so it runs again."""
@@ -396,8 +537,21 @@ class Coordinator:
         rnode.state = PENDING
         rnode.own_done_time = None
         rnode.executor_ids = []
-        rnode.seg_done = 0               # lineage recovery replays the
-        rnode.seg_state = None           # whole segment from its inputs
+        rnode.deferred_arrivals.clear()
+        restored = False
+        if rnode.seg_commit is not None:
+            ckey, csteps = rnode.seg_commit
+            if self.engine.exists(ckey):
+                # replicate-on-commit survivor: resume the segment from
+                # the latest committed chunk boundary
+                rnode.seg_done = csteps
+                rnode.seg_state = self.engine.value_of(ckey)
+                restored = True
+            else:
+                rnode.seg_commit = None
+        if not restored:
+            rnode.seg_done = 0           # lineage recovery replays the
+            rnode.seg_state = None       # whole segment from its inputs
         rnode.seg_pending = None
         rnode.pending_eager = sum(
             1 for ref in rnode.node.eager_input_refs()
@@ -410,6 +564,131 @@ class Coordinator:
                 self.engine.addref(key)
         if rnode.pending_eager == 0 and not missing_parent:
             self._node_ready(rnode)
+
+    # -------------------------------------------------- hardening/chaos
+    def _requeue_nodes(self, nodes: List[RequestNode], count_retry: bool) -> None:
+        """Send failed/timed-out nodes back to the queue.  With
+        ``count_retry`` the requeue counts against the per-node retry
+        budget (exhaustion sheds the whole request, exactly once) and
+        re-admission waits out a capped exponential backoff."""
+        for rn in list(nodes):
+            req = rn.request
+            if req.status != "inflight" or rn.state not in (RUNNING, AWAITING, READY):
+                continue
+            if count_retry:
+                rn.retries += 1
+                self.n_requeues += 1
+                if rn.retries > self.retry.node_retry_budget:
+                    self._shed_request(req)
+                    continue
+            rn.state = READY
+            rn.executor_ids = []
+            rn.own_done_time = None
+            rn.seg_pending = None        # uncommitted chunk re-runs
+            rn.deferred_arrivals.clear()
+            rn.ready_since = self.now
+            delay = self.retry.backoff(rn.retries) if count_retry else 0.0
+            if delay > 0.0:
+                self._push(self.now + delay, "requeue_release",
+                           (rn, rn.dispatch_seq))
+            elif rn not in self.ready:
+                self.ready.append(rn)
+
+    def _on_kick(self, _payload: Any) -> None:
+        """No-op event: exists so a recovery performed mid-cycle gets a
+        scheduling cycle of its own (the run loop cycles after every
+        event)."""
+
+    def _on_requeue_release(self, payload: Tuple[RequestNode, int]) -> None:
+        rn, token = payload
+        if (rn.request.status != "inflight" or rn.state != READY
+                or rn.dispatch_seq != token or rn in self.ready):
+            return  # shed, rescued to PENDING, or re-dispatched meanwhile
+        self.ready.append(rn)
+
+    def _on_batch_timeout(self, record: Dict[str, Any]) -> None:
+        """The batch never reported completion within its deadline
+        (hung/runaway forward, or its completion event belongs to a
+        failed path).  Cancel the executors' runaway work, mark them for
+        quarantine accounting, and requeue the still-running nodes."""
+        if record.get("done"):
+            return
+        record["done"] = True
+        self.n_timeouts += 1
+        batch: ScheduledBatch = record["batch"]
+        for eid in batch.executor_ids:
+            ex = self.by_id.get(eid)
+            if ex is None or not ex.alive:
+                continue
+            ex.cancel(self.now)
+            self._note_executor_failure(ex)
+        stale = [rn for rn in batch.nodes
+                 if rn.state == RUNNING
+                 and record["seqs"].get(rn.uid) == rn.dispatch_seq]
+        self._requeue_nodes(stale, count_retry=True)
+
+    def _note_executor_failure(self, ex: Executor) -> None:
+        if self.faults is None:
+            return
+        ex.note_failure(self.now, self.retry.quarantine_window)
+        self._maybe_quarantine(ex)
+
+    def _maybe_quarantine(self, ex: Executor) -> None:
+        if self.faults is None or not ex.alive or ex.state != SERVING:
+            return
+        horizon = self.now - self.retry.quarantine_window
+        recent = sum(1 for t in ex.failure_times if t >= horizon)
+        if recent < self.retry.quarantine_failures:
+            return
+        models = list(ex.loaded)
+        ex.begin_quarantine()
+        if self.autoscaler is not None:
+            # drained capacity is a demand signal: the fleet may need to
+            # re-provision these models elsewhere while the cooldown runs
+            self.autoscaler.note_quarantine(self.now, models)
+        self._log_fleet()
+        self._push(self.now + self.retry.quarantine_seconds,
+                   "quarantine_release", ex.id)
+
+    def _on_quarantine_release(self, executor_id: int) -> None:
+        ex = self.by_id[executor_id]
+        if not ex.alive or ex.state != QUARANTINE:
+            return
+        ex.release_quarantine()
+        self._log_fleet()
+
+    def _shed_request(self, req: Request) -> None:
+        """Terminal give-up: the request leaves the system exactly once
+        with status ``shed`` (counted against SLO attainment), and every
+        value it still holds is reclaimed."""
+        if req.status != "inflight":
+            return
+        req.status = "shed"
+        self.inflight.pop(req.rid, None)
+        self.shed.append(req)
+        for rn in req.nodes.values():
+            if rn.state != DONE:
+                rn.state = SHED
+            if rn in self.ready:
+                self.ready.remove(rn)
+        leftovers = [f"r{req.rid}:in:{name}" for name in req.graph.input_ports]
+        for n in req.graph.nodes:
+            leftovers.extend(req.ref_key(ref) for ref in n.output_refs.values())
+        leftovers.extend(rn.seg_commit[0] for rn in req.nodes.values()
+                         if rn.seg_commit is not None)
+        for key in leftovers:
+            self._drop_key(key)
+
+    def _recover_lost_fetch(self, err: DataFetchError) -> None:
+        """A datastore transfer failed past its budget and dropped the
+        key: re-execute the producer (lineage recovery) and pull any
+        READY consumer of the key back to PENDING."""
+        if err.lineage is not None:
+            rid_s, nid_s = err.lineage.split(":")
+            req = self.inflight.get(int(rid_s))
+            if req is not None:
+                self._reexecute(req.nodes[int(nid_s)])
+        self._rescue_ready_nodes({err.key})
 
     # ---------------------------------------------------------- autoscaling
     @property
@@ -566,6 +845,10 @@ class Coordinator:
 
     def _dispatch(self, batch: ScheduledBatch) -> None:
         self.dispatch_log.append(batch)
+        batch_index = self._batch_index
+        self._batch_index += 1
+        fault = (self.faults.at_dispatch(batch_index, self.now)
+                 if self.faults is not None else None)
         lead = self.by_id[batch.executor_ids[0]]
         profile = self.profiles.get(batch.model_id)
         # model loads + patch state on every participating executor
@@ -579,11 +862,21 @@ class Coordinator:
             else:
                 ex.touch(batch.model_id)
             ex.set_patches(batch.model_id, list(batch.nodes[0].effective_patches))
-        # account input fetches into the lead executor's store
-        for rn in batch.nodes:
-            for key in rn.input_keys(eager_only=True):
-                if self.engine.exists(key):
-                    self.engine.fetch(key, lead.id)
+        # account input fetches into the lead executor's store (chaos: a
+        # transfer may be lost in flight past its retry budget)
+        try:
+            for rn in batch.nodes:
+                for key in rn.input_keys(eager_only=True):
+                    if self.engine.exists(key):
+                        self.engine.fetch(key, lead.id)
+        except DataFetchError as err:
+            self._requeue_nodes(batch.nodes, count_retry=False)
+            self._recover_lost_fetch(err)
+            # this failure happened *inside* a scheduling cycle: kick the
+            # loop so the requeued/recovered nodes get a fresh cycle even
+            # if no other event is pending
+            self._push(self.now, "kick", None)
+            return
         duration = batch.duration
         # synchronous adapter fetch (no AsyncLoRAPass): the first dispatch
         # of a patched node on an executor pays the remote fetch inline
@@ -594,15 +887,78 @@ class Coordinator:
                     if ckey not in self._adapters_cached:
                         self._adapters_cached.add(ckey)
                         duration += patch.cost().param_bytes / self.profiles.hw.remote_bw
-        if self.backend is not None:
+        if fault == "transient":
+            attempts = self.faults.transient_attempts(batch_index)
+            if self.backend is not None:
+                # the backend itself raises; retry the stacked forward
+                # around the injected errors with capped backoff
+                real = self._execute_real_hardened(batch, attempts)
+                if real is None:
+                    # persisted past the in-dispatch budget: fall back to
+                    # the requeue path (counts against the retry budget)
+                    self._requeue_nodes(batch.nodes, count_retry=True)
+                    return
+                measured, penalty = real
+                duration = measured + batch.l_data + batch.patch_swap + penalty
+            else:
+                retries = min(attempts, self.retry.max_transient_retries)
+                self.n_transient_retries += retries
+                if attempts > self.retry.max_transient_retries:
+                    for eid in batch.executor_ids:
+                        self._note_executor_failure(self.by_id[eid])
+                    self._requeue_nodes(batch.nodes, count_retry=True)
+                    return
+                duration += sum(self.retry.backoff(i) for i in range(1, retries + 1))
+        elif self.backend is not None and fault != "hang":
             duration = self._execute_real(batch) + batch.l_data + batch.patch_swap
+        # a hung forward never reports back: occupy for the modeled
+        # duration but push no completion — only the timeout recovers it
+        base_duration = duration
+        if fault == "slow":
+            # gray failure: trips the timeout iff slow_factor > timeout_factor
+            duration *= self.faults.slow_factor
         for eid in batch.executor_ids:
             self.by_id[eid].occupy(self.now, duration)
+        record: Dict[str, Any] = {"batch": batch, "seqs": {}, "done": False}
         for rn in batch.nodes:
             rn.state = RUNNING
             rn.executor_ids = list(batch.executor_ids)
             rn.dispatch_time = self.now
-        self._push(self.now + duration, "batch_done", {"batch": batch})
+            rn.dispatch_seq += 1
+            record["seqs"][rn.uid] = rn.dispatch_seq
+        if fault != "hang":
+            self._push(self.now + duration, "batch_done", record)
+        if self.faults is not None:
+            timeout = max(self.retry.timeout_floor,
+                          self.retry.timeout_factor * base_duration)
+            self._push(self.now + timeout, "batch_timeout", record)
+        if fault == "crash":
+            # the lead executor dies partway through the batch window
+            self._push(self.now + self.faults.crash_frac * duration,
+                       "executor_fail", lead.id)
+
+    def _execute_real_hardened(
+        self, batch: ScheduledBatch, inject_attempts: int,
+    ) -> Optional[Tuple[float, float]]:
+        """Run the stacked forward, retrying transient backend errors
+        with capped backoff.  Returns (measured seconds, virtual backoff
+        penalty) or None when the error outlives the retry budget."""
+        self.backend.chaos_attempts = [0, inject_attempts]
+        penalty = 0.0
+        try:
+            for attempt in range(1, self.retry.max_transient_retries + 2):
+                try:
+                    return self._execute_real(batch), penalty
+                except TransientBackendError:
+                    self.n_transient_retries += 1
+                    penalty += self.retry.backoff(attempt)
+                    if attempt > self.retry.max_transient_retries:
+                        break
+        finally:
+            self.backend.chaos_attempts = None
+        for eid in batch.executor_ids:
+            self._note_executor_failure(self.by_id[eid])
+        return None
 
     def _execute_real(self, batch: ScheduledBatch) -> float:
         """Executable plane: run the whole ScheduledBatch as ONE stacked
@@ -682,8 +1038,15 @@ class Coordinator:
             arrival = rnode.deferred_arrivals.get(key)
             if arrival is None:
                 lead = rnode.executor_ids[0] if rnode.executor_ids else None
-                cost = self.engine.fetch(key, lead) if (
-                    lead is not None and self.engine.exists(key)) else 0.0
+                try:
+                    cost = self.engine.fetch(key, lead) if (
+                        lead is not None and self.engine.exists(key)) else 0.0
+                except DataFetchError as err:
+                    # the deferred value was lost in transit: requeue this
+                    # node and lineage-recover the producer
+                    self._requeue_nodes([rnode], count_retry=False)
+                    self._recover_lost_fetch(err)
+                    return
                 arrival = self.now + cost
                 rnode.deferred_arrivals[key] = arrival
             latest = max(latest, arrival)
@@ -700,6 +1063,8 @@ class Coordinator:
 
     def _complete_node(self, rnode: RequestNode, t: float) -> None:
         req = rnode.request
+        if req.status != "inflight":
+            return  # request was shed while this completion was in flight
         node = rnode.node
         rnode.state = DONE
         req.remaining -= 1
@@ -723,6 +1088,12 @@ class Coordinator:
             refcount = req.consumer_count.get(key, 0)
             if key in req.pinned_keys:
                 refcount += 1_000_000
+            if self.engine.exists(key):
+                # a re-executed ancestor can complete while this output
+                # (produced for a consumer on a lost executor) survived
+                # elsewhere — values are immutable, so keep the live copy
+                # rather than double-committing it
+                continue
             self.engine.put(key, executor_id=lead, nbytes=int(nb), value=value,
                             producer_node=rnode.uid, refcount=max(1, refcount))
         # release consumed inputs (immutable, refcounted GC)
@@ -745,8 +1116,13 @@ class Coordinator:
                 key = req.ref_key(r)
                 if crn.state in (RUNNING, AWAITING):
                     lead_c = crn.executor_ids[0] if crn.executor_ids else None
-                    fetch = self.engine.fetch(key, lead_c) if (
-                        lead_c is not None and self.engine.exists(key)) else 0.0
+                    try:
+                        fetch = self.engine.fetch(key, lead_c) if (
+                            lead_c is not None and self.engine.exists(key)) else 0.0
+                    except DataFetchError as err:
+                        self._requeue_nodes([crn], count_retry=False)
+                        self._recover_lost_fetch(err)
+                        continue
                     crn.deferred_arrivals[key] = t + fetch
                     if crn.state == AWAITING:
                         crn.state = RUNNING
@@ -779,20 +1155,22 @@ class Coordinator:
         req.status = "done"
         self.inflight.pop(req.rid, None)
         self.finished.append(req)
-        # GC everything this request still holds (inputs + non-output temps)
+        # GC everything this request still holds (inputs + non-output temps
+        # + replicated segment commits)
         leftovers = [f"r{req.rid}:in:{name}" for name in req.graph.input_ports]
         for n in req.graph.nodes:
             leftovers.extend(req.ref_key(ref) for ref in n.output_refs.values())
+        leftovers.extend(rn.seg_commit[0] for rn in req.nodes.values()
+                         if rn.seg_commit is not None)
         for key in leftovers:
             if self.engine.exists(key) and key not in req.pinned_keys:
-                sv = self.engine.get(key)
-                sv.refcount = 0
-                self.engine.release(key)
+                self._drop_key(key)
 
     # -------------------------------------------------------------- metrics
     def slo_attainment(self, include_rejected: bool = True) -> float:
         attained = sum(1 for r in self.finished if r.attained)
-        total = len(self.finished) + (len(self.rejected) if include_rejected else 0)
+        total = len(self.finished) + len(self.shed) + (
+            len(self.rejected) if include_rejected else 0)
         return attained / total if total else 0.0
 
     def mean_latency(self) -> float:

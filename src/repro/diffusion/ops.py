@@ -972,8 +972,15 @@ class DenoiseSegment(Model):
         key = ("segment", mesh)
         if key not in cache:
             cache[key] = jax.jit(self._make_sharded_scan(mesh))
+        # inputs may arrive committed to a previous placement (the home
+        # device, or a different submesh after a recovery re-dispatch of
+        # a chunked segment); replicate them onto THIS submesh so they
+        # agree with the replicated params
         out = cache[key](*self._params(model_components),
-                         lat, emb, cond, t_mid, t_cur, t_next, guidance)
+                         _mesh_put(lat, mesh), _mesh_put(emb, mesh),
+                         _mesh_put(cond, mesh), _mesh_put(t_mid, mesh),
+                         _mesh_put(t_cur, mesh), _mesh_put(t_next, mesh),
+                         _mesh_put(guidance, mesh))
         return [{"latents": chunk} for chunk in _split_rows(out, sizes)]
 
     def _make_sharded_scan(self, mesh: Any) -> Any:

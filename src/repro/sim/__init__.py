@@ -1,5 +1,6 @@
 """Cluster-scale simulation plane: traces, metrics, monolithic baselines."""
 
+from repro.sim.invariants import assert_invariants, check_invariants
 from repro.sim.metrics import (
     RequestRecord,
     executor_seconds,

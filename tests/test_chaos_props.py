@@ -1,0 +1,223 @@
+"""Property tests (hypothesis): random seeded fault schedules against the
+serving-system invariants.
+
+Every drawn fault configuration — crashes on a cadence or probabilistic,
+with or without revival, hung/slow forwards, transient backend errors,
+lost transfers — must leave the coordinator consistent: every admitted
+request terminates exactly once, no duplicated commits, refcounts stay
+non-negative, nothing leaks, and the same seed replays the exact same
+outcome.
+"""
+
+import os
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis dependency")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import FaultPlane, Model, ModelCost, RetryPolicy, ServingSystem, TensorType, compose
+from repro.sim import check_invariants
+
+# CI pins a profile (HYPOTHESIS_PROFILE=ci) so the chaos sweep is the
+# same on every run; locally the default profile applies.
+settings.register_profile("ci", max_examples=20, deadline=None,
+                          derandomize=True, print_blob=True)
+settings.register_profile("dev", max_examples=15, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+
+
+class _PropToyModel(Model):
+    """Self-contained sim-plane model: hypothesis's @given cannot use
+    function-scoped pytest fixtures, so the toy workflow is built here."""
+
+    def __init__(self, model_id, inputs, outputs, cost_kw=None, trivial=False,
+                 deferred=()):
+        self._io = (inputs, outputs, set(deferred))
+        self._cost_kw = cost_kw or {}
+        self.trivial = trivial
+        super().__init__(model_id=model_id)
+
+    def setup_io(self):
+        inputs, outputs, deferred = self._io
+        for name, typ in inputs:
+            self.add_input(name, typ, deferred=name in deferred)
+        for name, typ in outputs:
+            self.add_output(name, typ)
+
+    def execute(self, model_components, **kw):
+        return {name: f"<{self.model_id}.{name}>" for name, _ in self._io[1]}
+
+    def cost(self):
+        kw = dict(flops_per_item=1e13, param_bytes=2e9, act_io_bytes=1e9,
+                  output_bytes=4e6, max_batch=8, max_parallelism=1)
+        kw.update(self._cost_kw)
+        return ModelCost(**kw)
+
+
+def _toy_workflow(steps=4):
+    T = TensorType()
+    enc = _PropToyModel("enc", [("prompt", str)], [("emb", T)],
+                        {"flops_per_item": 1e11, "max_batch": 8})
+    backbone = _PropToyModel(
+        "backbone", [("latents", T), ("emb", T), ("cn", T)], [("noise", T)],
+        {"flops_per_item": 5e13, "param_bytes": 4e9, "max_parallelism": 2,
+         "max_batch": 4},
+        deferred=("cn",))
+    cn = _PropToyModel("cn", [("latents", T), ("emb", T)], [("res", T)],
+                       {"flops_per_item": 2.5e13, "output_bytes": 1.5e8,
+                        "max_batch": 4})
+    denoise = _PropToyModel("denoise", [("noise", T), ("latents", T)],
+                            [("latents", T)],
+                            {"flops_per_item": 1e6, "param_bytes": 0},
+                            trivial=True)
+    latgen = _PropToyModel("latgen", [("seed", int)], [("latents", T)],
+                           {"flops_per_item": 1e6, "param_bytes": 0},
+                           trivial=True)
+    vae = _PropToyModel("vae", [("latents", T)], [("img", T)],
+                        {"flops_per_item": 5e12, "param_bytes": 3e8})
+
+    @compose("toy_chaos")
+    def wf_fn(wf):
+        seed = wf.add_input("seed", int)
+        prompt = wf.add_input("prompt", str)
+        lat = latgen(seed)
+        emb = enc(prompt)
+        for _ in range(steps):
+            res = cn(lat, emb)
+            noise = backbone(lat, emb, cn=res)
+            lat = denoise(noise, lat)
+        img = vae(lat)
+        wf.add_output(img, name="img")
+
+    return wf_fn
+
+
+def _run_chaos(faults, n_requests=6, n_executors=4, retry=None):
+    sys_ = ServingSystem(n_executors=n_executors, faults=faults,
+                         retry_policy=retry)
+    sys_.register(_toy_workflow())
+    reqs = [sys_.submit("toy_chaos", inputs={"seed": i, "prompt": "x"},
+                        arrival=i * 0.15, slo_seconds=60.0)
+            for i in range(n_requests)]
+    sys_.run()
+    return sys_, reqs
+
+
+fault_planes = st.builds(
+    FaultPlane,
+    seed=st.integers(0, 2**16),
+    crash_every_batches=st.one_of(st.none(), st.integers(2, 9)),
+    crash_p=st.floats(0.0, 0.15),
+    revive_after=st.one_of(st.none(), st.floats(0.1, 2.0)),
+    slow_p=st.floats(0.0, 0.2),
+    slow_factor=st.floats(2.0, 12.0),
+    hang_p=st.floats(0.0, 0.15),
+    transient_p=st.floats(0.0, 0.3),
+    fetch_loss_p=st.floats(0.0, 0.2),
+    max_crashes=st.one_of(st.none(), st.integers(1, 6)),
+    crash_frac=st.floats(0.05, 0.95),
+)
+
+
+@given(faults=fault_planes)
+@settings(suppress_health_check=[HealthCheck.too_slow])
+def test_invariants_hold_under_any_fault_schedule(faults):
+    sys_, reqs = _run_chaos(faults)
+    co = sys_.coordinator
+    errs = check_invariants(co)
+    assert not errs, f"faults={faults.counts()}: " + "; ".join(errs)
+    # exactly-once termination, spelled out on the request objects too
+    for r in reqs:
+        assert r.status in ("done", "rejected", "shed"), r.status
+
+
+@given(faults=fault_planes)
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_same_seed_replays_identically(faults):
+    """The fault plane draws from (seed, site, counter) hashes only —
+    two runs of the same configuration are bit-identical."""
+
+    def snapshot():
+        clone = FaultPlane(
+            seed=faults.seed, crash_every_batches=faults.crash_every_batches,
+            crash_p=faults.crash_p, revive_after=faults.revive_after,
+            slow_p=faults.slow_p, slow_factor=faults.slow_factor,
+            hang_p=faults.hang_p, transient_p=faults.transient_p,
+            fetch_loss_p=faults.fetch_loss_p, max_crashes=faults.max_crashes,
+            crash_frac=faults.crash_frac)
+        sys_, reqs = _run_chaos(clone)
+        co = sys_.coordinator
+        return (
+            [(r.rid, r.status, r.completion) for r in reqs],
+            clone.counts(),
+            co.n_timeouts, co.n_requeues, co.n_transient_retries,
+            round(co.now, 9),
+        )
+
+    assert snapshot() == snapshot()
+
+
+@given(every=st.integers(2, 6), seed=st.integers(0, 99))
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_crash_revive_cadence_completes_all_requests(every, seed):
+    """Crash-every-N with revival never loses work: every request still
+    terminates (overwhelmingly by finishing) and invariants hold."""
+    faults = FaultPlane(seed=seed, crash_every_batches=every, revive_after=0.5)
+    sys_, reqs = _run_chaos(faults)
+    co = sys_.coordinator
+    assert not check_invariants(co)
+    assert all(r.status in ("done", "rejected", "shed") for r in reqs)
+    assert len(co.finished) >= len(reqs) - len(co.rejected) - len(co.shed)
+
+
+@given(seed=st.integers(0, 99))
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_retry_budget_sheds_exactly_once(seed):
+    """A hang-always fault with no recovery path exhausts the retry
+    budget: every admitted request ends shed exactly once (never lost,
+    never double-terminated)."""
+    faults = FaultPlane(seed=seed, hang_p=1.0)
+    retry = RetryPolicy(node_retry_budget=2, backoff_base=0.01,
+                        timeout_factor=2.0)
+    sys_, reqs = _run_chaos(faults, n_requests=3, retry=retry)
+    co = sys_.coordinator
+    assert not check_invariants(co)
+    assert len(co.shed) == len([r for r in reqs if r.status == "shed"])
+    assert all(r.status == "shed" for r in reqs)
+    assert co.n_timeouts > 0
+    # the store must be empty: shed requests leave nothing behind
+    assert len(co.engine) == 0
+
+
+def test_quarantine_drains_flapping_executor():
+    """Enough failure marks inside the window put the executor in
+    quarantine (out of the dispatch pool), then release re-provisions."""
+    faults = FaultPlane(seed=3, hang_p=1.0, max_crashes=0)
+    retry = RetryPolicy(node_retry_budget=50, quarantine_failures=2,
+                        quarantine_window=100.0, quarantine_seconds=1.0,
+                        timeout_factor=2.0)
+    sys_, reqs = _run_chaos(faults, n_requests=2, n_executors=2, retry=retry)
+    co = sys_.coordinator
+    assert any(e.n_quarantines > 0 for e in co.executors)
+    assert not check_invariants(co)
+
+
+def test_from_env_roundtrip(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS",
+                       "crash_every=5,revive=1.0,transient_p=0.05,seed=7")
+    fp = FaultPlane.from_env()
+    assert (fp.crash_every_batches, fp.revive_after,
+            fp.transient_p, fp.seed) == (5, 1.0, 0.05, 7)
+    monkeypatch.setenv("REPRO_FAULTS", "0")
+    assert FaultPlane.from_env() is None
+    monkeypatch.delenv("REPRO_FAULTS")
+    assert FaultPlane.from_env() is None
+    # a coordinator built under REPRO_FAULTS picks the plane up
+    monkeypatch.setenv("REPRO_FAULTS", "crash_every=4,revive=0.5,seed=1")
+    sys_ = ServingSystem(n_executors=2)
+    assert sys_.coordinator.faults is not None
+    assert sys_.coordinator.faults.crash_every_batches == 4
