@@ -1,0 +1,313 @@
+"""Process-isolated executor plane: overhead and chaos attainment.
+
+Runs the S1 trace (sd3 basic / +C.N.1 / +C.N.2) on REAL worker
+processes (multiprocessing spawn + TCP frame transport) and reports:
+
+* ``proc_overhead`` — the honest cost of process isolation on a
+  fault-free trace vs the in-process executable plane: serialization
+  wall, transport wall vs worker compute, bytes shipped over the
+  sockets, and the staging protocol's hit/ship split.
+* ``proc_chaos_ratio`` — SLO attainment under a SIGKILL/respawn cadence
+  (process-level faults through the ``REPRO_FAULTS`` grammar: workers
+  killed mid-RPC, respawned by the supervisor with the measured restart
+  wall charged to the revive delay) relative to the fault-free proc
+  plane.  Acceptance bar: ratio >= 0.9.
+* ``recovery`` — kill -9 the lead worker right after the second segment
+  chunk's exec frame is on the wire; the recovered image must be
+  BIT-EXACT against the fault-free run.
+* the serving-system + transport invariants (exactly-once, no leaks,
+  replies == applied + fenced) after every arm.
+
+SLO deadlines come from solo latencies measured on a warmed proc system
+(the executable plane's timeline is measured wall, so analytic solos
+would not be comparable).  All arms share one on-disk XLA cache so
+respawned workers re-pay weight init, not compilation.
+
+CLI: ``python -m benchmarks.bench_proc_chaos [--smoke]``; writes
+``BENCH_proc_chaos.json`` at the repo root.  Exits 0 with
+``skipped: true`` on sandboxed runners that cannot spawn processes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+from benchmarks.common import emit
+
+PROC_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_proc_chaos.json")
+N_EXECUTORS = 2
+SLO_SCALE = 8.0
+# deadlines must exceed worst-case single-failure recovery (respawn wall
+# + the revived worker's cold first dispatch: weight re-init plus disk
+# compile-cache hits) to be meaningful — the toy models' solo latencies
+# are milliseconds while a real process restart is seconds, so the grace
+# term, reported in the JSON, carries that
+SLO_GRACE = 4.0
+
+
+def _system(workflows, backend, faults=None):
+    from repro.core import Scheduler, ServingSystem
+
+    sys_ = ServingSystem(n_executors=N_EXECUTORS, backend=backend,
+                         faults=faults)
+    sys_.coordinator.scheduler = Scheduler(
+        sys_.profiles, use_declared_max_batch=True, segment_chunk=2)
+    for t in workflows.values():
+        sys_.register(t)
+    return sys_
+
+
+def _measure_solos(workflows, steps: int) -> Dict[str, float]:
+    """Solo latency per workflow on a WARMED proc system: the first pass
+    pays spawn + compile (discarded), the second is the measured solo."""
+    from repro.core import ProcBackend
+
+    solos: Dict[str, float] = {}
+    with _system(workflows, ProcBackend()) as sys_:
+        co = sys_.coordinator
+        for _ in range(2):
+            solos.clear()
+            for name in workflows:
+                t0 = co.now
+                r = sys_.submit(name, inputs={"prompt": "warm", "seed": 0},
+                                arrival=co.now, steps=steps)
+                sys_.run()
+                assert r.status == "done", (name, r.status)
+                solos[name] = r.completion - t0
+    return solos
+
+
+_PROC_COUNTERS = (
+    "n_execs", "transport_seconds", "worker_seconds", "restart_seconds",
+    "bytes_tx", "bytes_rx", "bytes_shipped", "staging_hits",
+    "staging_ships", "n_fenced", "n_exec_replies", "n_exec_applied",
+)
+
+
+def _proc_snapshot(co) -> Dict[str, float]:
+    be = co.backend
+    snap = {k: getattr(be, k) for k in _PROC_COUNTERS}
+    snap["ser_seconds"] = be.ser_seconds + co.engine.ser_seconds
+    snap["n_spawns"] = be.supervisor.n_spawns
+    return snap
+
+
+def _arm(workflows, trace, solos, steps: int, proc: bool,
+         fault_spec: Optional[str] = None) -> Dict[str, Any]:
+    """One arm = warm pass (same trace, no SLOs, faults detached — pays
+    jit compiles and weight init) + measured pass.  Attainment and the
+    overhead split are computed over the measured pass only."""
+    from repro.core import FaultPlane, LocalBackend, ProcBackend
+    from repro.sim import check_invariants
+
+    faults = FaultPlane.from_env(fault_spec) if fault_spec else None
+    backend = ProcBackend() if proc else LocalBackend()
+    with _system(workflows, backend) as sys_:
+        co = sys_.coordinator
+        for tr in trace:   # warm pass
+            sys_.submit(tr.workflow, inputs=tr.inputs, arrival=tr.arrival,
+                        steps=steps)
+        sys_.run()
+        warm_end = co.now
+        if faults is not None:   # chaos armed for the measured pass only
+            co.faults = faults
+            co.engine.faults = faults
+            if proc:
+                backend._faults = faults
+                backend.supervisor.faults = faults
+        snap = _proc_snapshot(co) if proc else {}
+        wall0 = time.perf_counter()
+        traced = [
+            sys_.submit(tr.workflow, inputs=tr.inputs,
+                        arrival=warm_end + tr.arrival,
+                        slo_seconds=SLO_SCALE * solos[tr.workflow]
+                        + SLO_GRACE,
+                        steps=steps)
+            for tr in trace
+        ]
+        sys_.run()
+        wall = time.perf_counter() - wall0
+        errs = check_invariants(co)
+        done = [r for r in traced if r.status == "done"]
+        lats = sorted(r.latency for r in done)
+        p99 = lats[min(len(lats) - 1, int(0.99 * len(lats)))] if lats \
+            else float("nan")
+        out: Dict[str, Any] = {
+            "attainment": sum(1 for r in done if r.attained) / len(traced),
+            "p99_latency_s": p99,
+            "finished": len(done),
+            "rejected": sum(1 for r in traced if r.status == "rejected"),
+            "shed": sum(1 for r in traced if r.status == "shed"),
+            "requeues": co.n_requeues,
+            "worker_deaths": co.n_worker_deaths,
+            "revives": sum(e.n_revives for e in co.executors),
+            "wall_seconds": wall,
+            "faults_injected": faults.counts() if faults is not None else {},
+            "invariants_ok": not errs,
+            "invariant_errors": errs,
+        }
+        if proc:
+            after = _proc_snapshot(co)
+            out["proc"] = {k: round(after[k] - snap[k], 6)
+                           if isinstance(after[k], float)
+                           else after[k] - snap[k]
+                           for k in after}
+    return out
+
+
+def trace_study(smoke: bool = False) -> Dict[str, Any]:
+    from repro.diffusion import table2_setting
+    from repro.sim import generate_trace
+
+    workflows = table2_setting("s1")
+    steps = 3 if smoke else 4
+    duration = 6.0 if smoke else 20.0
+    trace = generate_trace(list(workflows), rate=1.0, duration=duration,
+                           cv=1.0, seed=7)
+    solos = _measure_solos(workflows, steps)
+    out: Dict[str, Any] = {
+        "n_requests": len(trace),
+        "steps": steps,
+        "slo_scale": SLO_SCALE,
+        "slo_grace_s": SLO_GRACE,
+        "solo_latency_s": solos,
+    }
+
+    out["inproc"] = _arm(workflows, trace, solos, steps, proc=False)
+    emit("proc_inproc_baseline", out["inproc"]["attainment"] * 100,
+         f"n={len(trace)};wall={out['inproc']['wall_seconds']:.1f}s")
+
+    out["proc"] = _arm(workflows, trace, solos, steps, proc=True)
+    p = out["proc"]["proc"]
+    compute = max(p["worker_seconds"], 1e-9)
+    out["proc_overhead"] = {
+        "ser_over_compute": p["ser_seconds"] / compute,
+        "transport_over_compute": p["transport_seconds"] / compute,
+        "attainment_vs_inproc":
+            out["proc"]["attainment"] / out["inproc"]["attainment"]
+            if out["inproc"]["attainment"] else 0.0,
+    }
+    emit("proc_faultfree", out["proc"]["attainment"] * 100,
+         f"ser/compute={out['proc_overhead']['ser_over_compute']:.3f};"
+         f"transport/compute="
+         f"{out['proc_overhead']['transport_over_compute']:.3f};"
+         f"shipMB={p['bytes_shipped'] / 1e6:.1f}")
+
+    # kill/revive cadence sized off the fault-free arm's exec count, and
+    # built through the REPRO_FAULTS grammar operators would use
+    kills = 1 if smoke else 3
+    every = max(5, p["n_execs"] // (kills + 1))
+    spec = f"kill_every={every},max_kills={kills},seed=7"
+    out["kill_spec"] = spec
+    out["proc_chaos"] = _arm(workflows, trace, solos, steps, proc=True,
+                             fault_spec=spec)
+    base = out["proc"]["attainment"]
+    ratio = out["proc_chaos"]["attainment"] / base if base else 0.0
+    out["proc_chaos_ratio"] = ratio
+    out["within_10pct"] = ratio >= 0.9
+    emit("proc_kill_revive", out["proc_chaos"]["attainment"] * 100,
+         f"ratio={ratio:.3f};kills={out['proc_chaos']['worker_deaths']};"
+         f"restart={out['proc_chaos']['proc']['restart_seconds']:.1f}s")
+    return out
+
+
+def recovery_parity(steps: int = 5) -> Dict[str, Any]:
+    """kill -9 the lead worker right after the second segment chunk's
+    exec frame hits the wire; recovery must be bit-exact."""
+    import numpy as np
+
+    from repro.core import FaultPlane, ProcBackend
+    from repro.diffusion import make_basic_workflow
+    from repro.sim import check_invariants
+
+    def serve(faults):
+        wf = make_basic_workflow("sd3")
+        with _system({wf.name: wf}, ProcBackend(), faults=faults) as sys_:
+            r = sys_.submit(wf.name, inputs={"seed": 0, "prompt": "chaos"},
+                            arrival=0.0, steps=steps)
+            sys_.run()
+            assert r.status == "done", r.status
+            img = np.asarray(sys_.coordinator.engine.value_of(
+                r.ref_key(r.graph.outputs["image"])))
+            be = sys_.coordinator.backend
+            seg_idxs = [i for i, (m, _) in enumerate(be.exec_log)
+                        if m.startswith("segment:")]
+            errs = check_invariants(sys_.coordinator)
+            stats = {
+                "worker_deaths": sys_.coordinator.n_worker_deaths,
+                "restart_seconds": be.restart_seconds,
+                "n_fenced": be.n_fenced,
+            }
+        return img, seg_idxs, errs, stats
+
+    want, seg_idxs, _, _ = serve(None)
+    faults = FaultPlane(seed=0, kill_every_execs=seg_idxs[1], max_kills=1)
+    got, _, errs, stats = serve(faults)
+    bitexact = bool(np.array_equal(got, want))
+    out = {
+        "bitexact": bitexact,
+        "kills": faults.n_kills,
+        "invariants_ok": not errs,
+        "invariant_errors": errs,
+        **stats,
+    }
+    emit("proc_recovery_bitexact", float(bitexact),
+         f"kills={faults.n_kills};"
+         f"restart={stats['restart_seconds']:.1f}s")
+    return out
+
+
+def run(smoke: bool = False) -> Dict[str, Any]:
+    from repro.core import processes_available
+
+    if not processes_available():
+        result: Dict[str, Any] = {"skipped": True,
+                                  "reason": "cannot spawn processes"}
+        emit("proc_chaos_skipped", 1.0, "sandboxed runner")
+    else:
+        # one shared on-disk XLA cache for every arm AND every respawned
+        # worker (children inherit the env; the supervisor's own cache
+        # dir is only a fallback)
+        os.environ.setdefault(
+            "JAX_COMPILATION_CACHE_DIR",
+            tempfile.mkdtemp(prefix="repro-bench-proc-xla-"))
+        os.environ.setdefault(
+            "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+        os.environ.setdefault(
+            "JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "0")
+        result = {
+            "trace": trace_study(smoke=smoke),
+            "recovery": recovery_parity(steps=3 if smoke else 5),
+        }
+        ok = (result["trace"]["within_10pct"]
+              and result["recovery"]["bitexact"]
+              and result["trace"]["inproc"]["invariants_ok"]
+              and result["trace"]["proc"]["invariants_ok"]
+              and result["trace"]["proc_chaos"]["invariants_ok"]
+              and result["recovery"]["invariants_ok"])
+        result["acceptance_ok"] = ok
+        emit("proc_chaos_acceptance", float(ok),
+             f"ratio={result['trace']['proc_chaos_ratio']:.3f};"
+             f"bitexact={result['recovery']['bitexact']}")
+    with open(PROC_JSON, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace, single kill (CI liveness)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

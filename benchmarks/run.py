@@ -22,6 +22,7 @@ from benchmarks import (
     bench_latency_throughput,
     bench_overhead,
     bench_parallelism,
+    bench_proc_chaos,
     bench_programmability,
     bench_scaling,
     bench_sharing,
@@ -48,6 +49,7 @@ ALL = [
     ("s74_async_lora", bench_async_lora),
     ("s75_overhead", bench_overhead),
     ("s6_chaos", bench_chaos),
+    ("s7_proc_chaos", bench_proc_chaos),
     ("roofline", roofline),
 ]
 

@@ -36,6 +36,14 @@ from repro.core.profiles import GPU_H800, TPU_V5E, HardwareSpec, LatencyProfile,
 from repro.core.registry import ServingSystem, WorkflowRegistry
 from repro.core.runtime import Coordinator, Request, RequestNode
 from repro.core.scheduler import ScheduledBatch, Scheduler
+from repro.core.supervisor import ProcBackend, ProcConfig, Supervisor, processes_available
+from repro.core.transport import (
+    ChecksumError,
+    FrameChannel,
+    StagedInput,
+    TransportError,
+    WorkerDied,
+)
 from repro.core.types import (
     DataRef,
     Image,

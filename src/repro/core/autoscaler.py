@@ -125,6 +125,7 @@ class Autoscaler:
         # constituent models, weighted by their serial seconds)
         self.rejections: Deque[Tuple[float, Tuple[str, ...]]] = deque()
         self.n_quarantine_signals: int = 0
+        self.n_worker_death_signals: int = 0
 
     def note_rejection(self, now: float, model_ids: Sequence[str]) -> None:
         self.rejections.append((now, tuple(model_ids)))
@@ -137,6 +138,14 @@ class Autoscaler:
         if model_ids:
             self.rejections.append((now, tuple(model_ids)))
             self.n_quarantine_signals += 1
+
+    def note_worker_death(self, now: float, model_ids: Sequence[str]) -> None:
+        """A worker *process* died (heartbeat lease expiry or exit on the
+        process-isolated plane): its resident models lost capacity exactly
+        like a quarantine drain — same demand signal, same window."""
+        if model_ids:
+            self.rejections.append((now, tuple(model_ids)))
+            self.n_worker_death_signals += 1
 
     def _rejection_pressure(self, now: float) -> Dict[str, float]:
         """Serial-seconds of rejected work per model over the window."""

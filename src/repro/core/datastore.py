@@ -17,11 +17,23 @@ Key properties carried over from the paper:
   consumer remains;
 * **lineage** (producer node id) supports recovery by re-execution when an
   executor fails.
+
+**Serialized mode** (process-isolated plane): with ``serialized = True``
+every ``put`` immediately encodes the value to a portable byte payload
+and *drops the live object*; ``value_of`` decodes on demand.  Every
+value the coordinator consumes or re-ships has therefore provably
+round-tripped through bytes — placement is no longer a reference copy.
+The engine additionally tracks a bounded per-executor **staging view**
+(which keys each worker process holds in its local LRU), so repeat
+dispatches send a bare key instead of re-shipping the tensor, and an
+executor's death invalidates its whole view at once.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time as _time
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 
@@ -33,6 +45,7 @@ class StoredValue:
     producer_node: Optional[str] = None  # lineage (request-scoped node uid)
     refcount: int = 0
     value: Any = None                    # real payload (executable plane)
+    payload: Optional[bytes] = None      # serialized form (proc plane)
 
 
 class FetchFuture:
@@ -81,6 +94,17 @@ class DataEngine:
         # the raw key, so replay is exact even when key strings embed
         # process-global node ids
         self._fetch_sites: Dict[str, int] = {}
+        # serialized mode (process plane): values live as byte payloads
+        self.serialized = False
+        self.ser_seconds = 0.0          # wall spent encoding/decoding
+        self.serialized_bytes = 0       # total payload bytes produced
+        self.n_encodes = 0
+        self.n_decodes = 0
+        # per-executor staging views (insertion-ordered for LRU parity
+        # with the worker-side store)
+        self.staged: Dict[int, "OrderedDict[str, None]"] = {}
+        self.staging_capacity = 512
+        self.stage_evictions = 0
 
     # --------------------------------------------------------------- puts
     def put(
@@ -112,6 +136,18 @@ class DataEngine:
             refcount=refcount,
             value=value,
         )
+        if self.serialized and value is not None:
+            # serialized put: the live object is dropped — anything read
+            # back provably round-tripped through bytes, like a value
+            # crossing a process boundary does
+            from repro.core.transport import encode_value
+
+            t0 = _time.perf_counter()
+            sv.payload = encode_value(value)
+            self.ser_seconds += _time.perf_counter() - t0
+            self.serialized_bytes += len(sv.payload)
+            self.n_encodes += 1
+            sv.value = None
         self._store[key] = sv
         return sv
 
@@ -122,7 +158,45 @@ class DataEngine:
         return self._store[key]
 
     def value_of(self, key: str) -> Any:
-        return self._store[key].value
+        sv = self._store[key]
+        if sv.value is None and sv.payload is not None:
+            from repro.core.transport import decode_value
+
+            t0 = _time.perf_counter()
+            sv.value = decode_value(sv.payload)
+            self.ser_seconds += _time.perf_counter() - t0
+            self.n_decodes += 1
+        return sv.value
+
+    def payload_for(self, key: str) -> Optional[bytes]:
+        """Canonical serialized form of ``key`` (None when the value
+        never went through a serialized put) — reused by the transport
+        so a tensor is encoded once, not once per ship."""
+        sv = self._store.get(key)
+        return sv.payload if sv is not None else None
+
+    # ------------------------------------------------------------- staging
+    def stage_mark(self, executor_id: int, key: str) -> None:
+        """Record that ``executor_id``'s worker process now holds ``key``
+        in its local staging store (shipped to it, or produced by it)."""
+        view = self.staged.setdefault(executor_id, OrderedDict())
+        view[key] = None
+        view.move_to_end(key)
+        while len(view) > self.staging_capacity:
+            view.popitem(last=False)
+            self.stage_evictions += 1
+
+    def is_staged(self, executor_id: int, key: str) -> bool:
+        view = self.staged.get(executor_id)
+        if view is None or key not in view:
+            return False
+        view.move_to_end(key)      # keep LRU order aligned with the worker
+        return True
+
+    def unstage_executor(self, executor_id: int) -> None:
+        """Forget everything staged on ``executor_id`` — its worker died
+        or was replaced, so every key must re-ship."""
+        self.staged.pop(executor_id, None)
 
     # ------------------------------------------------------------- fetches
     def fetch_cost(self, key: str, to_executor: int) -> float:
@@ -209,11 +283,19 @@ class DataEngine:
     def executor_lost(self, executor_id: int) -> List[Tuple[str, Optional[str]]]:
         """Drop placements on a dead executor; return (key, lineage) for
         values that now have no live copy and must be recomputed."""
+        self.unstage_executor(executor_id)
         lost: List[Tuple[str, Optional[str]]] = []
         for key, sv in list(self._store.items()):
             if executor_id in sv.placements:
                 sv.placements.discard(executor_id)
                 if not sv.placements:
+                    if (self.serialized and sv.payload is not None
+                            and sv.refcount >= 1_000_000):
+                        # pinned workflow output on the serialized plane:
+                        # the bytes were shipped to the coordinator at
+                        # commit, so the canonical copy survives worker
+                        # loss (empty placements = frontend-local)
+                        continue
                     lost.append((key, sv.producer_node))
                     del self._store[key]
         return lost

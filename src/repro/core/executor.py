@@ -83,6 +83,11 @@ class Executor:
         self.n_failures: int = 0
         self.n_quarantines: int = 0
         self.n_revives: int = 0
+        # process plane (ProcBackend): pid of the worker process backing
+        # this executor, and its fencing epoch — bumped on every declared
+        # death so a zombie incarnation's late replies are rejectable
+        self.worker_pid: Optional[int] = None
+        self.epoch: int = 0
 
     # ------------------------------------------------------------- memory
     @property

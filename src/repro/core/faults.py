@@ -33,6 +33,22 @@ Fault taxonomy (all independently schedulable):
                 :class:`DataFetchError` so the coordinator re-executes
                 the producer (lineage recovery).
 
+Process-plane faults (real fault domains — only meaningful with the
+:class:`~repro.core.supervisor.ProcBackend`, where executors are
+separate OS processes):
+
+``proc_kill``   SIGKILL the worker process the instant the exec frame is
+                on the wire (``kill_every_execs`` cadence, bounded by
+                ``max_kills``);
+``blackhole``   the coordinator-side channel holds the worker's frames
+                for ``blackhole_seconds`` wall seconds — heartbeats
+                included, so the liveness monitor declares a zombie whose
+                late ``exec_done`` must be epoch-fenced;
+``frame_dup`` / ``frame_delay``
+                a control frame is delivered twice / reordered behind the
+                next poll's traffic (``frame_dup_p`` / ``frame_delay_p``
+                per control frame, drawn from the seeded hash).
+
 Everything is gated by the ``REPRO_FAULTS`` environment variable (see
 :meth:`FaultPlane.from_env`); with it unset the serving system carries no
 chaos machinery at all — not even timeout events.
@@ -131,6 +147,12 @@ class FaultPlane:
         fetch_loss_p: float = 0.0,
         max_crashes: Optional[int] = None,
         crash_frac: float = 0.5,
+        kill_every_execs: Optional[int] = None,
+        max_kills: Optional[int] = None,
+        blackhole_exec: Optional[int] = None,
+        blackhole_seconds: float = 0.5,
+        frame_dup_p: float = 0.0,
+        frame_delay_p: float = 0.0,
     ) -> None:
         self.seed = int(seed)
         self.crash_every_batches = crash_every_batches
@@ -145,8 +167,16 @@ class FaultPlane:
         self.max_crashes = max_crashes
         # where inside the batch window the crash lands (0..1)
         self.crash_frac = crash_frac
+        # process-plane schedule (ProcBackend only)
+        self.kill_every_execs = kill_every_execs
+        self.max_kills = max_kills
+        self.blackhole_exec = blackhole_exec
+        self.blackhole_seconds = blackhole_seconds
+        self.frame_dup_p = frame_dup_p
+        self.frame_delay_p = frame_delay_p
         self.injected: List[InjectedFault] = []
         self.n_crashes = 0
+        self.n_kills = 0
 
     # ----------------------------------------------------------- determinism
     def _u(self, site: str, counter: int) -> float:
@@ -195,6 +225,43 @@ class FaultPlane:
             n += 1
         return n
 
+    # -------------------------------------------------------- process plane
+    def proc_kill(self, exec_index: int) -> bool:
+        """SIGKILL the worker serving the ``exec_index``-th RPC?  Fires on
+        the ``kill_every_execs`` cadence, bounded by ``max_kills``."""
+        if (not self.kill_every_execs
+                or exec_index <= 0
+                or exec_index % self.kill_every_execs != 0):
+            return False
+        if self.max_kills is not None and self.n_kills >= self.max_kills:
+            return False
+        self.n_kills += 1
+        self._record(None, "proc_kill", f"exec:{exec_index}")
+        return True
+
+    def proc_blackhole(self, exec_index: int) -> float:
+        """Wall seconds to blackhole the worker's channel starting at the
+        ``exec_index``-th RPC (0.0 = no blackhole).  Holds *all* frames —
+        heartbeats included — so the liveness lease expires while the
+        process keeps running: the canonical partitioned zombie."""
+        if self.blackhole_exec is None or exec_index != self.blackhole_exec:
+            return 0.0
+        self._record(None, "blackhole", f"exec:{exec_index}")
+        return self.blackhole_seconds
+
+    def frame_fault(self, worker_id: int, counter: int) -> Optional[str]:
+        """Chaos decision for the ``counter``-th control frame received
+        from ``worker_id``: ``dup``, ``delay``, or None."""
+        if self.frame_dup_p and \
+                self._u(f"frame_dup:w{worker_id}", counter) < self.frame_dup_p:
+            self._record(None, "frame_dup", f"w{worker_id}:{counter}")
+            return "dup"
+        if self.frame_delay_p and \
+                self._u(f"frame_delay:w{worker_id}", counter) < self.frame_delay_p:
+            self._record(None, "frame_delay", f"w{worker_id}:{counter}")
+            return "delay"
+        return None
+
     # -------------------------------------------------------------- fetches
     def fetch_lost(self, key: str, attempt: int, site: Optional[str] = None) -> bool:
         """Is the ``attempt``-th transfer of ``key`` lost in flight?
@@ -236,8 +303,12 @@ class FaultPlane:
 
         Keys: ``seed``, ``crash_every``, ``crash_p``, ``revive``,
         ``slow_p``, ``slow_factor``, ``hang_p``, ``transient_p``,
-        ``fetch_loss_p``, ``max_crashes``, ``crash_frac``.  Unset, empty,
-        or ``0`` disables the chaos plane entirely.
+        ``fetch_loss_p``, ``max_crashes``, ``crash_frac``, and the
+        process-plane schedule ``kill_every``, ``max_kills``,
+        ``blackhole_exec``, ``blackhole_for``, ``frame_dup_p``,
+        ``frame_delay_p``.  Unknown keys raise ``ValueError`` naming the
+        key (a typo'd fault spec must not silently run fault-free).
+        Unset, empty, or ``0`` disables the chaos plane entirely.
         """
         spec = os.environ.get("REPRO_FAULTS", "") if env is None else env
         spec = spec.strip()
@@ -247,7 +318,15 @@ class FaultPlane:
         alias = {
             "crash_every": "crash_every_batches",
             "revive": "revive_after",
+            "kill_every": "kill_every_execs",
+            "blackhole_for": "blackhole_seconds",
         }
+        int_keys = ("seed", "crash_every_batches", "max_crashes",
+                    "kill_every_execs", "max_kills", "blackhole_exec")
+        import inspect
+
+        known = {p for p in inspect.signature(cls.__init__).parameters
+                 if p not in ("self", "crash_at")}
         for part in spec.split(","):
             part = part.strip()
             if not part:
@@ -256,8 +335,9 @@ class FaultPlane:
                 raise ValueError(f"REPRO_FAULTS: bad item {part!r}")
             k, v = part.split("=", 1)
             k = alias.get(k.strip(), k.strip())
-            if k in ("seed", "crash_every_batches", "max_crashes"):
-                kw[k] = int(v)
-            else:
-                kw[k] = float(v)
+            if k not in known:
+                raise ValueError(
+                    f"REPRO_FAULTS: unknown key {k!r} "
+                    f"(known: {', '.join(sorted(known | set(alias)))})")
+            kw[k] = int(v) if k in int_keys else float(v)
         return cls(**kw)

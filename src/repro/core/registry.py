@@ -55,7 +55,7 @@ class ServingSystem:
         scheduler: Optional[Scheduler] = None,
         admission_enabled: bool = False,
         extra_passes: Optional[Sequence[Pass]] = None,
-        backend: Optional[LocalBackend] = None,
+        backend: Any = None,
         pods: int = 1,
         executor_memory: Optional[float] = None,
         autoscaler: Any = None,
@@ -75,7 +75,16 @@ class ServingSystem:
         ``REPRO_FAULTS`` environment variable specifies), ``retry_policy``
         overrides the timeout/backoff/quarantine knobs, and
         ``replicate_segments`` turns on replicate-on-commit for fused
-        denoise-segment state."""
+        denoise-segment state.
+
+        ``backend="proc"`` builds the process-isolated executor plane
+        (each executor a separate OS process behind the frame transport;
+        see :mod:`repro.core.supervisor`) — remember to :meth:`close`
+        the system, or use it as a context manager."""
+        if backend == "proc":
+            from repro.core.supervisor import ProcBackend
+
+            backend = ProcBackend()
         self.profiles = ProfileStore(hw)
         passes = default_passes()
         if extra_passes:
@@ -131,6 +140,18 @@ class ServingSystem:
 
     def run(self, until: Optional[float] = None) -> None:
         self.coordinator.run(until)
+
+    def close(self) -> None:
+        """Tear down backend resources (process-plane workers)."""
+        backend = self.coordinator.backend
+        if backend is not None and hasattr(backend, "close"):
+            backend.close()
+
+    def __enter__(self) -> "ServingSystem":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
     # ------------------------------------------------------------ metrics
     @property

@@ -54,6 +54,7 @@ from repro.core.faults import (
 )
 from repro.core.profiles import ProfileStore, node_infer_time
 from repro.core.scheduler import ScheduledBatch, Scheduler
+from repro.core.transport import StagedInput, WorkerDied
 from repro.core.types import ValueRef, nbytes_of
 
 PENDING, READY, RUNNING, AWAITING, DONE = "pending", "ready", "running", "awaiting", "done"
@@ -285,6 +286,16 @@ class Coordinator:
         self.n_stranded = 0               # inflight shed at drained loop
         self._batch_index = 0             # dispatch counter (fault schedule)
         self._crashes_seeded = False
+        # ------------------------------------------------- process plane
+        # With a ProcBackend every executor is a separate OS process: the
+        # backend binds to this coordinator (serialized datastore, shared
+        # fault plane) and deaths are detected by heartbeat lease or RPC
+        # failure instead of injected events
+        self._proc = bool(getattr(backend, "is_proc_plane", False))
+        self.n_worker_deaths = 0          # WorkerDied handled (all reasons)
+        self.n_heartbeat_deaths = 0       # ... of which: lease expiry
+        if hasattr(backend, "attach_coordinator"):
+            backend.attach_coordinator(self)
 
     # ----------------------------------------------------------- frontend
     def submit(
@@ -319,6 +330,12 @@ class Coordinator:
             self._tick_scheduled = True
             self._push(self.events[0][0], "autoscale_tick", None)
         while self.events:
+            if self._proc:
+                # wall-clock liveness sweep: drain idle worker channels
+                # (stale replies found there are fenced) and declare any
+                # exited/silent worker dead before the next event runs
+                for err in self.backend.poll_liveness():
+                    self._handle_worker_death(err)
             t, _, kind, payload = self.events[0]
             if until is not None and t > until:
                 break
@@ -450,15 +467,51 @@ class Coordinator:
             self._complete_node(rnode, self.now)
 
     def _on_executor_fail(self, executor_id: int) -> None:
+        self._fail_executor_now(executor_id, kill_process=True)
+
+    def _handle_worker_death(self, err: WorkerDied) -> None:
+        """Process plane: a worker left its fault domain (exit, heartbeat
+        lease expiry, or RPC stall).  The process is already dead or
+        partitioned, so it is NOT re-killed: a live-but-silent zombie is
+        adopted by the recovery path with a bumped epoch, precisely so
+        its late frames surface and get fenced."""
+        ex = self.by_id.get(err.executor_id)
+        if ex is None or not ex.alive:
+            return     # already declared (e.g. RPC raised, sweep re-saw it)
+        self.n_worker_deaths += 1
+        if err.reason == "heartbeat":
+            self.n_heartbeat_deaths += 1
+        self._fail_executor_now(err.executor_id, kill_process=False)
+
+    def _fail_executor_now(self, executor_id: int, kill_process: bool) -> None:
         ex = self.by_id[executor_id]
         if not ex.alive:
             return  # double fail event (e.g. crash_at + crash_every collide)
+        resident = list(ex.loaded)
         ex.fail()
-        if self.faults is not None:
+        if self._proc and kill_process:
+            # control-plane-initiated failure of a real fault domain: the
+            # worker process actually dies (chaos crash events included)
+            self.backend.kill_worker(executor_id)
+        if self.faults is not None or self._proc:
             ex.note_failure(self.now, self.retry.quarantine_window)
-            if self.faults.revive_after is not None:
-                self._push(self.now + self.faults.revive_after,
-                           "executor_revive", executor_id)
+        revive_delay: Optional[float] = None
+        if self._proc:
+            # supervised recovery: the worker always comes back — respawn
+            # wall seconds (measured; 0 for an adopted zombie) gate the
+            # revive, combined with any virtual revive_after schedule
+            wall = self.backend.recover_worker(executor_id)
+            virtual = 0.0
+            if self.faults is not None and self.faults.revive_after is not None:
+                virtual = self.faults.revive_after
+            revive_delay = max(wall, virtual)
+        elif self.faults is not None and self.faults.revive_after is not None:
+            revive_delay = self.faults.revive_after
+        if revive_delay is not None:
+            self._push(self.now + revive_delay, "executor_revive", executor_id)
+        if self._proc and self.autoscaler is not None and resident:
+            # lost capacity is a demand signal, same as a quarantine drain
+            self.autoscaler.note_worker_death(self.now, resident)
         self._log_fleet()
         # requeue nodes that were running there (with chaos on, the
         # requeue counts against the retry budget and backs off)
@@ -466,7 +519,8 @@ class Coordinator:
             rn for req in self.inflight.values() for rn in req.nodes.values()
             if rn.state in (RUNNING, AWAITING) and executor_id in rn.executor_ids
         ]
-        self._requeue_nodes(victims, count_retry=self.faults is not None)
+        self._requeue_nodes(victims,
+                            count_retry=self.faults is not None or self._proc)
         # lineage-based recovery of lost values
         lost = self.engine.executor_lost(executor_id)
         for key, lineage in lost:
@@ -628,13 +682,14 @@ class Coordinator:
         self._requeue_nodes(stale, count_retry=True)
 
     def _note_executor_failure(self, ex: Executor) -> None:
-        if self.faults is None:
+        if self.faults is None and not self._proc:
             return
         ex.note_failure(self.now, self.retry.quarantine_window)
         self._maybe_quarantine(ex)
 
     def _maybe_quarantine(self, ex: Executor) -> None:
-        if self.faults is None or not ex.alive or ex.state != SERVING:
+        if (self.faults is None and not self._proc) \
+                or not ex.alive or ex.state != SERVING:
             return
         horizon = self.now - self.retry.quarantine_window
         recent = sum(1 for t in ex.failure_times if t >= horizon)
@@ -892,7 +947,11 @@ class Coordinator:
             if self.backend is not None:
                 # the backend itself raises; retry the stacked forward
                 # around the injected errors with capped backoff
-                real = self._execute_real_hardened(batch, attempts)
+                try:
+                    real = self._execute_real_hardened(batch, attempts)
+                except WorkerDied as err:
+                    self._abort_dispatch_on_death(batch, err)
+                    return
                 if real is None:
                     # persisted past the in-dispatch budget: fall back to
                     # the requeue path (counts against the retry budget)
@@ -910,7 +969,11 @@ class Coordinator:
                     return
                 duration += sum(self.retry.backoff(i) for i in range(1, retries + 1))
         elif self.backend is not None and fault != "hang":
-            duration = self._execute_real(batch) + batch.l_data + batch.patch_swap
+            try:
+                duration = self._execute_real(batch) + batch.l_data + batch.patch_swap
+            except WorkerDied as err:
+                self._abort_dispatch_on_death(batch, err)
+                return
         # a hung forward never reports back: occupy for the modeled
         # duration but push no completion — only the timeout recovers it
         base_duration = duration
@@ -936,6 +999,16 @@ class Coordinator:
             # the lead executor dies partway through the batch window
             self._push(self.now + self.faults.crash_frac * duration,
                        "executor_fail", lead.id)
+
+    def _abort_dispatch_on_death(self, batch: ScheduledBatch,
+                                 err: WorkerDied) -> None:
+        """The worker serving this dispatch died mid-RPC — before any of
+        the batch's nodes flipped to RUNNING.  Declare the death (with
+        supervised recovery + fencing) and requeue the batch through the
+        retry budget; the kick event buys the requeued nodes a cycle."""
+        self._handle_worker_death(err)
+        self._requeue_nodes(batch.nodes, count_retry=True)
+        self._push(self.now, "kick", None)
 
     def _execute_real_hardened(
         self, batch: ScheduledBatch, inject_attempts: int,
@@ -984,6 +1057,7 @@ class Coordinator:
         groups: Dict[type, List[RequestNode]] = {}
         for rn in batch.nodes:
             groups.setdefault(type(rn.node.op), []).append(rn)
+        proc = self._proc
         for rns in groups.values():
             lead = rns[0]
             op = lead.node.op
@@ -991,11 +1065,17 @@ class Coordinator:
             effective = lead.effective_patches
             patches = [p for p in op.patches if p.model_id in effective]
             batch_kwargs: List[Dict[str, Any]] = []
+            out_keys: List[Dict[str, str]] = []
             for rn in rns:
                 kwargs: Dict[str, Any] = {}
                 for name, v in rn.node.inputs.items():
                     if isinstance(v, ValueRef):
-                        kwargs[name] = self.engine.value_of(rn.request.ref_key(v))
+                        key = rn.request.ref_key(v)
+                        val = self.engine.value_of(key)
+                        # proc plane: keyed inputs travel as StagedInput so
+                        # the transport ships the payload only when the
+                        # worker has not already staged the key
+                        kwargs[name] = StagedInput(key, val) if proc else val
                     else:
                         kwargs[name] = v
                 if is_segment:
@@ -1003,13 +1083,43 @@ class Coordinator:
                     # graph-input latent, and the chosen chunk bounds how
                     # many scan steps this dispatch runs
                     if rn.seg_state is not None:
-                        kwargs["latents"] = rn.seg_state
+                        if proc:
+                            skey = (f"r{rn.request.rid}:n{rn.node.id}"
+                                    f":seg:{rn.seg_done}")
+                            kwargs["latents"] = StagedInput(skey, rn.seg_state)
+                        else:
+                            kwargs["latents"] = rn.seg_state
                     kwargs["_seg_start"] = rn.seg_done
                     kwargs["_seg_steps"] = batch.segment_steps
+                if proc:
+                    # where the worker stages this node's outputs: a chunk
+                    # that finishes the segment (or any ordinary node)
+                    # lands under its real ref keys; an intermediate chunk
+                    # stages the carried latent under a synthetic step key
+                    # so the NEXT chunk on the same worker sends a bare ref
+                    ok: Dict[str, str] = {}
+                    if is_segment:
+                        total_steps = rn.segment_total
+                        nxt = min(total_steps,
+                                  rn.seg_done + max(1, batch.segment_steps))
+                        if nxt >= total_steps:
+                            for port, ref in rn.node.output_refs.items():
+                                ok[port] = rn.request.ref_key(ref)
+                        else:
+                            ok["latents"] = (f"r{rn.request.rid}"
+                                             f":n{rn.node.id}:seg:{nxt}")
+                    else:
+                        for port, ref in rn.node.output_refs.items():
+                            ok[port] = rn.request.ref_key(ref)
+                    out_keys.append(ok)
                 batch_kwargs.append(kwargs)
             if submesh is not None:
                 outs, load_dt, exec_dt = self.backend.execute_batch(
                     op, batch_kwargs, patches=patches, mesh=submesh)
+            elif proc:
+                outs, load_dt, exec_dt = self.backend.execute_batch(
+                    op, batch_kwargs, patches=patches,
+                    executor_id=batch.executor_ids[0], out_keys=out_keys)
             else:
                 outs, load_dt, exec_dt = self.backend.execute_batch(
                     op, batch_kwargs, patches=patches)

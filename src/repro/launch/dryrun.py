@@ -1,5 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if __name__ == "__main__":
+    # Only when executed as a script: give jax 512 placeholder CPU
+    # devices so ``jax.make_mesh((2,16,16))`` can build the production
+    # mesh — set BEFORE any other import, since jax locks the device
+    # count on first init.  Must NOT run on plain import: the parent's
+    # already-initialized jax would ignore it, but any worker process
+    # spawned afterwards would inherit 512 devices and partition
+    # reductions differently than the coordinator (float drift).
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape)
 pair on the production meshes, and extract the roofline raw material.
@@ -8,10 +16,6 @@ Usage::
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both --out dryrun.json
-
-The two mandatory lines above give jax 512 placeholder CPU devices so
-``jax.make_mesh((2,16,16))`` can build the production mesh — set BEFORE
-any other import, since jax locks the device count on first init.
 """
 
 import argparse

@@ -1,5 +1,9 @@
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+if __name__ == "__main__":
+    # Script-only (see repro.launch.dryrun): importing this module must
+    # not mutate the process env out from under spawned workers.
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """Dry-run for the paper's OWN models: one CFG denoising step of the
 real-scale MMDiT backbone on the production mesh.

@@ -26,6 +26,11 @@ code, and returns every violation it finds:
 6.  **Lineage replay terminated** — no node is left mid-flight
     (RUNNING/AWAITING) and the ready queue is empty once the event loop
     drains.
+7.  **Transport accounting closes** (process-isolated plane only) —
+    every exec reply the coordinator accepted was either applied or
+    provably fenced (``n_exec_replies == n_exec_applied + n_fenced``),
+    no frame survived a checksum mismatch, and the datastore's staging
+    views only name executors that exist.
 
 These checks are cheap (linear in requests + store size) and pure —
 they never mutate the coordinator — so chaos tests and
@@ -130,6 +135,19 @@ def check_invariants(coordinator: Any, drained: bool = True) -> List[str]:
             for rn in r.nodes.values():
                 if rn.state in ("running", "awaiting"):
                     errs.append(f"node {rn.uid} left mid-flight ({rn.state})")
+
+    # 7. transport accounting closes (process plane) ---------------------
+    be = co.backend
+    if be is not None and getattr(be, "is_proc_plane", False):
+        if be.crc_errors:
+            errs.append(f"{be.crc_errors} frame checksum error(s) on the wire")
+        if be.n_exec_replies != be.n_exec_applied + be.n_fenced:
+            errs.append(
+                f"exec replies unaccounted: {be.n_exec_replies} received != "
+                f"{be.n_exec_applied} applied + {be.n_fenced} fenced")
+        for eid in getattr(eng, "staged", {}):
+            if eid not in co.by_id:
+                errs.append(f"staging view for unknown executor {eid}")
     return errs
 
 

@@ -291,6 +291,63 @@ def test_crash_time_sweep_with_deferred_fetches():
             assert_invariants(co)
 
 
+def test_shed_with_live_seg_commit_replicas_leaks_nothing():
+    """GC audit: a request shed WHILE its replicate-on-commit segment
+    state still has live replicas (lead + backup placements) must
+    reclaim the replica key — shedding leaves the store empty even
+    though the backup copy survived the executor failure."""
+    sys_, req = _serve(make_basic_workflow("sd3"), {"seed": 0, "prompt": "x"},
+                       n_exec=3, faults=FaultPlane(seed=0),
+                       retry=RetryPolicy(node_retry_budget=0),
+                       replicate=True)
+    co = sys_.coordinator
+    seg_rn = next(rn for rn in req.nodes.values()
+                  if rn.node.op.model_id.startswith("segment:"))
+    # run until a committed chunk exists AND the next chunk is in flight
+    assert _drive_until(
+        co, lambda: seg_rn.seg_commit is not None
+        and seg_rn.state == "running")
+    key = seg_rn.seg_commit[0]
+    placements = set(co.engine.get(key).placements)
+    assert len(placements) == 2           # replica pair is live right now
+    # kill the lead: requeue overruns the zero retry budget -> shed while
+    # the backup replica still holds a copy
+    co.fail_executor(seg_rn.executor_ids[0], at=co.now)
+    co.run()
+    assert req.status == "shed" and req in co.shed
+    assert not any(":segc:" in k for k in co.engine._store)
+    assert len(co.engine) == 0            # shed requests leave NOTHING
+    assert_invariants(co)
+
+
+def test_retry_policy_plumbs_through_bench_harness():
+    """Every RetryPolicy field settable through the benchmark harness
+    (``build_lego`` / ``run_lego_trace``) reaches the coordinator — a
+    knob silently dropped on the way in would make chaos benchmarks lie."""
+    from benchmarks.common import build_lego, run_lego_trace
+    from repro.diffusion import make_basic_workflow as _mk
+
+    base = RetryPolicy()
+    overrides = {}
+    for i, f in enumerate(dataclasses.fields(RetryPolicy)):
+        d = getattr(base, f.name)
+        overrides[f.name] = d + 3 + i if isinstance(d, int) \
+            else round(d * 2 + 0.011 * (i + 1), 6)
+    assert all(overrides[k] != getattr(base, k) for k in overrides)
+    policy = RetryPolicy(**overrides)
+    wf = _mk("sd3")
+    wfs = {wf.name: wf}
+
+    for sys_ in (build_lego(wfs, n_executors=2, retry_policy=policy),
+                 run_lego_trace(wfs, [], n_executors=2,
+                                retry_policy=policy)):
+        co = sys_.coordinator
+        for f in dataclasses.fields(RetryPolicy):
+            assert getattr(co.retry, f.name) == overrides[f.name], f.name
+        # the one knob consumed outside the coordinator proper
+        assert co.engine.max_fetch_retries == overrides["max_fetch_retries"]
+
+
 def test_stale_batch_done_after_fast_redispatch():
     """A crashed batch's original completion event outlives the crash;
     with a near-zero backoff the victim re-dispatches BEFORE that event

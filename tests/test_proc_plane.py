@@ -1,0 +1,244 @@
+"""Process-isolated executor plane: liveness, fencing, supervised recovery.
+
+Every test here drives REAL worker processes (multiprocessing spawn +
+TCP frame transport) and proves the robustness contracts end to end:
+
+* proc execution is bit-exact against the in-process reference, with the
+  staging protocol avoiding re-ships of keyed tensors;
+* SIGKILL mid-segment -> the supervisor respawns the worker and lineage
+  replay reproduces the fault-free image bit-exactly (basic AND LoRA);
+* a heartbeat blackhole partitions a worker long enough to be declared
+  dead; the zombie is adopted, its late ``exec_done`` carries a stale
+  epoch and is provably fenced, and the transport accounting invariant
+  (replies == applied + fenced) closes;
+* duplicated / reordered control frames are absorbed without breaking
+  parity;
+* the supervisor restart lifecycle bumps the fencing epoch and rotates
+  the worker pid.
+
+Skips cleanly on sandboxed runners that forbid spawning processes.
+"""
+
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultPlane,
+    LocalBackend,
+    ProcBackend,
+    ProcConfig,
+    Scheduler,
+    ServingSystem,
+    processes_available,
+)
+from repro.core.profiles import GPU_H800
+from repro.diffusion import make_basic_workflow, make_lora_workflow
+from repro.sim import assert_invariants, check_invariants
+
+pytestmark = pytest.mark.skipif(
+    not processes_available(),
+    reason="sandboxed runner: cannot spawn worker processes")
+
+# adapter fetch resolves (sim-time) before any measured dispatch finishes
+FAST_FETCH = dataclasses.replace(GPU_H800, remote_bw=1e18)
+
+# short wall-clock knobs so liveness tests finish fast; the lease stays
+# comfortably above one RPC's worth of silence
+FAST = ProcConfig(hb_interval=0.02, hb_timeout=2.0, spawn_timeout=120.0)
+
+
+def _serve(wf, inputs, steps=5, faults=None, hw=GPU_H800, n_exec=2,
+           config=FAST, backend=None):
+    """One executable-plane run with segment_chunk=2 (requests span
+    several segment dispatches, so faults can land mid-segment)."""
+    backend = backend if backend is not None else ProcBackend(config)
+    sys_ = ServingSystem(n_executors=n_exec, backend=backend, hw=hw,
+                         faults=faults)
+    sys_.coordinator.scheduler = Scheduler(
+        sys_.profiles, use_declared_max_batch=True, segment_chunk=2)
+    sys_.register(wf)
+    req = sys_.submit(wf.name, inputs=inputs, arrival=0.0, steps=steps)
+    return sys_, req
+
+
+def _image(sys_, req):
+    return np.asarray(sys_.coordinator.engine.value_of(
+        req.ref_key(req.graph.outputs["image"])))
+
+
+def _proc_segment_exec_indices(backend):
+    return [i for i, (model_id, _) in enumerate(backend.exec_log)
+            if model_id.startswith("segment:")]
+
+
+# --------------------------------------------------------------------------
+# parity + staging
+# --------------------------------------------------------------------------
+
+def test_proc_parity_and_staging_bitexact():
+    """The proc plane reproduces the in-process image bit-exactly, every
+    value round-trips through serialized puts, and repeat dispatches to
+    the same worker reuse the staging store instead of re-shipping."""
+    wf = make_basic_workflow("sd3")
+    ref_sys, ref_req = _serve(wf, {"seed": 0, "prompt": "a fox"},
+                              backend=LocalBackend())
+    ref_sys.run()
+    want = _image(ref_sys, ref_req)
+
+    sys_, req = _serve(make_basic_workflow("sd3"),
+                       {"seed": 0, "prompt": "a fox"})
+    with sys_:
+        sys_.run()
+        assert req.status == "done"
+        np.testing.assert_array_equal(_image(sys_, req), want)
+        co = sys_.coordinator
+        be = co.backend
+        # serialized datastore: outputs provably crossed the boundary
+        assert co.engine.serialized and co.engine.n_encodes > 0
+        # segment chaining hit the worker-side staging store
+        assert be.staging_hits > 0 and be.staging_ships > 0
+        assert be.n_exec_replies == be.n_exec_applied and be.n_fenced == 0
+        assert be.bytes_tx > 0 and be.bytes_rx > 0
+        assert be.worker_seconds > 0 and be.transport_seconds >= 0
+        assert_invariants(co)
+
+
+# --------------------------------------------------------------------------
+# SIGKILL mid-segment: supervised respawn + lineage replay, bit-exact
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wf_maker,inputs,hw", [
+    (lambda: make_basic_workflow("sd3"),
+     {"seed": 0, "prompt": "a fox"}, GPU_H800),
+    (lambda: make_lora_workflow("sd3", "style"),
+     {"seed": 3, "prompt": "styled"}, FAST_FETCH),
+], ids=["basic", "lora"])
+def test_proc_kill_midsegment_recovery_bitexact(wf_maker, inputs, hw):
+    """kill -9 the lead worker right after the second segment chunk's
+    exec frame hits the wire; the supervisor respawns the process and
+    recovery reproduces the fault-free image bit-exactly."""
+    ref_sys, ref_req = _serve(wf_maker(), inputs, hw=hw)
+    with ref_sys:
+        ref_sys.run()
+        assert ref_req.status == "done"
+        want = _image(ref_sys, ref_req)
+        seg_idxs = _proc_segment_exec_indices(ref_sys.coordinator.backend)
+    assert len(seg_idxs) >= 2, "need >=2 segment chunks to kill mid-segment"
+
+    faults = FaultPlane(seed=0, kill_every_execs=seg_idxs[1], max_kills=1)
+    sys_, req = _serve(wf_maker(), inputs, hw=hw, faults=faults)
+    with sys_:
+        sys_.run()
+        co = sys_.coordinator
+        assert req.status == "done"
+        assert faults.n_kills == 1
+        assert co.n_worker_deaths >= 1
+        assert co.backend.supervisor.n_spawns >= 3   # 2 workers + respawn
+        assert co.backend.restart_seconds > 0
+        np.testing.assert_array_equal(_image(sys_, req), want)
+        assert_invariants(co)
+
+
+# --------------------------------------------------------------------------
+# heartbeat blackhole: zombie adopted, stale epoch provably fenced
+# --------------------------------------------------------------------------
+
+def test_zombie_blackhole_is_fenced():
+    """Partition a worker's receive path mid-RPC for longer than the
+    liveness lease.  The worker keeps computing (a zombie); the parent
+    declares it dead, recovers, and the zombie's late ``exec_done``
+    arrives with a stale epoch — fenced, never applied twice."""
+    wf = make_basic_workflow("sd3")
+    cfg = ProcConfig(hb_interval=0.02, hb_timeout=0.25)
+    # blackhole the 6th exec (first request warms both workers with 5)
+    # for longer than the lease: death by heartbeat, then the hold heals
+    # inside the renewed lease and the stale frame surfaces
+    faults = FaultPlane(seed=0, blackhole_exec=5, blackhole_seconds=0.45)
+    sys_, req1 = _serve(wf, {"seed": 0, "prompt": "a"}, faults=faults,
+                        config=cfg)
+    with sys_:
+        sys_.run()
+        assert req1.status == "done"
+        req2 = sys_.submit(wf.name, inputs={"seed": 1, "prompt": "b"},
+                           arrival=sys_.coordinator.now, steps=5)
+        sys_.run()
+        co = sys_.coordinator
+        be = co.backend
+        assert req2.status == "done"
+        assert co.n_heartbeat_deaths >= 1
+        assert be.n_fenced >= 1                       # the stale reply
+        assert be.n_exec_replies == be.n_exec_applied + be.n_fenced
+        # the zombie was ADOPTED, not respawned: same process, new epoch
+        assert any(h.epoch >= 1 for h in be.workers.values())
+        assert all(h.proc.is_alive() for h in be.workers.values())
+        assert check_invariants(co) == []
+
+
+# --------------------------------------------------------------------------
+# frame chaos: duplicated + reordered control frames absorbed
+# --------------------------------------------------------------------------
+
+def test_frame_dup_delay_chaos_parity():
+    wf = make_basic_workflow("sd3")
+    ref_sys, ref_req = _serve(wf, {"seed": 0, "prompt": "a fox"},
+                              backend=LocalBackend())
+    ref_sys.run()
+    want = _image(ref_sys, ref_req)
+
+    faults = FaultPlane(seed=5, frame_dup_p=0.4, frame_delay_p=0.4)
+    sys_, req = _serve(make_basic_workflow("sd3"),
+                       {"seed": 0, "prompt": "a fox"}, faults=faults)
+    with sys_:
+        sys_.run()
+        co = sys_.coordinator
+        be = co.backend
+        assert req.status == "done"
+        assert be.n_dup_frames + be.n_delayed_frames > 0
+        # a duplicated exec_done is a second reply for a consumed request
+        # id: it must land in n_fenced, never apply twice
+        assert be.n_exec_replies == be.n_exec_applied + be.n_fenced
+        np.testing.assert_array_equal(_image(sys_, req), want)
+        assert_invariants(co)
+
+
+# --------------------------------------------------------------------------
+# supervisor restart lifecycle
+# --------------------------------------------------------------------------
+
+def test_supervisor_restart_rotates_pid_and_epoch():
+    """Kill an idle worker directly: the liveness sweep (not an RPC)
+    detects the exit, recovery respawns through the warm-pool path, the
+    pid rotates, the epoch bumps, and the next request lands fine."""
+    wf = make_basic_workflow("sd3")
+    sys_, req1 = _serve(wf, {"seed": 0, "prompt": "a"})
+    with sys_:
+        sys_.run()
+        assert req1.status == "done"
+        co = sys_.coordinator
+        be = co.backend
+        victim = next(iter(be.workers))
+        old = be.workers[victim]
+        old_pid, old_epoch = old.pid, old.epoch
+        be.kill_worker(victim)
+        deadline = time.monotonic() + 10.0
+        while old.proc.is_alive() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not old.proc.is_alive()
+
+        req2 = sys_.submit(wf.name, inputs={"seed": 2, "prompt": "c"},
+                           arrival=co.now, steps=5)
+        sys_.run()
+        assert req2.status == "done"
+        assert co.n_worker_deaths >= 1
+        h = be.workers[victim]
+        assert h.pid != old_pid and h.proc.is_alive()
+        assert h.epoch == old_epoch + 1
+        ex = co.by_id[victim]
+        assert ex.worker_pid == h.pid and ex.epoch == h.epoch
+        assert ex.n_revives >= 1
+        # the dead worker's staging view was invalidated: keys re-shipped
+        assert be.staging_ships > 0
+        assert_invariants(co)

@@ -1,0 +1,205 @@
+"""Frame transport unit tests (no subprocesses — pure codec/channel).
+
+Covers the wire format (length-prefixed pickle frames with CRC32),
+portable tensor round-trips, and the FrameChannel chaos pipeline
+(blackhole hold/heal, duplicated and reordered control frames) over a
+plain socketpair, plus the ``REPRO_PROC`` config grammar.
+"""
+
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import FaultPlane, ProcConfig
+from repro.core.transport import (
+    ChecksumError,
+    FrameChannel,
+    HEADER_BYTES,
+    TransportError,
+    WorkerDied,
+    decode_value,
+    encode_frame,
+    encode_value,
+    split_frames,
+    to_portable,
+)
+
+
+# --------------------------------------------------------------------------
+# codec
+# --------------------------------------------------------------------------
+
+def test_frame_roundtrip_with_tensors():
+    import jax.numpy as jnp
+
+    arr = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    msg = {"kind": "exec_done", "outs": [{"latents": arr}], "req": 7}
+    buf = bytearray(encode_frame(msg))
+    (got,) = split_frames(buf)
+    assert not buf                       # fully consumed
+    assert got["kind"] == "exec_done" and got["req"] == 7
+    out = got["outs"][0]["latents"]
+    assert isinstance(out, np.ndarray)   # portable on the wire
+    np.testing.assert_array_equal(out, np.asarray(arr))
+
+
+def test_split_frames_handles_partial_and_multiple():
+    f1 = encode_frame({"kind": "hb", "n": 1})
+    f2 = encode_frame({"kind": "hb", "n": 2})
+    buf = bytearray(f1 + f2[: len(f2) // 2])
+    msgs = split_frames(buf)
+    assert [m["n"] for m in msgs] == [1]
+    buf.extend(f2[len(f2) // 2:])
+    assert [m["n"] for m in split_frames(buf)] == [2]
+
+
+def test_corrupted_payload_raises_checksum_error():
+    frame = bytearray(encode_frame({"kind": "exec_done", "x": 1}))
+    frame[HEADER_BYTES + 2] ^= 0xFF
+    with pytest.raises(ChecksumError):
+        split_frames(frame)
+
+
+def test_bad_magic_raises_transport_error():
+    frame = bytearray(encode_frame({"kind": "hb"}))
+    frame[0:4] = b"XXXX"
+    with pytest.raises(TransportError):
+        split_frames(frame)
+
+
+def test_value_roundtrip_bitexact():
+    import jax.numpy as jnp
+
+    v = {"a": jnp.linspace(0, 1, 17), "b": [1, (2.5, "s")], "c": None}
+    got = decode_value(encode_value(v))
+    np.testing.assert_array_equal(got["a"], np.asarray(v["a"]))
+    assert got["b"] == [1, (2.5, "s")] and got["c"] is None
+
+
+def test_to_portable_preserves_container_shapes():
+    import jax.numpy as jnp
+
+    out = to_portable((jnp.ones(3), {"k": [jnp.zeros(2)]}, "txt"))
+    assert isinstance(out, tuple) and isinstance(out[0], np.ndarray)
+    assert isinstance(out[1]["k"][0], np.ndarray) and out[2] == "txt"
+
+
+def test_worker_died_carries_reason():
+    err = WorkerDied(3, "heartbeat")
+    assert err.executor_id == 3 and err.reason == "heartbeat"
+    assert "worker 3" in str(err) and "heartbeat" in str(err)
+
+
+# --------------------------------------------------------------------------
+# channel chaos pipeline (socketpair, no subprocess)
+# --------------------------------------------------------------------------
+
+@pytest.fixture
+def channel_pair():
+    a, b = socket.socketpair()
+    yield a, b
+    a.close()
+    b.close()
+
+
+def _send(sock, msg):
+    sock.sendall(encode_frame(msg))
+
+
+def test_heartbeats_filtered_and_refresh_liveness(channel_pair):
+    worker, parent = channel_pair
+    ch = FrameChannel(parent, worker_id=0)
+    ch.last_rx = 0.0
+    _send(worker, {"kind": "hb", "worker": 0})
+    _send(worker, {"kind": "exec_done", "req": 1})
+    msgs = ch.poll(0.5)
+    assert [m["kind"] for m in msgs] == ["exec_done"]
+    assert ch.n_hb_rx == 1
+    assert ch.last_rx > 0.0              # heartbeat renewed the lease
+
+
+def test_blackhole_holds_frames_without_renewing_lease(channel_pair):
+    worker, parent = channel_pair
+    ch = FrameChannel(parent, worker_id=0)
+    ch.blackhole_until = time.monotonic() + 0.15
+    ch.last_rx = 0.0
+    _send(worker, {"kind": "hb", "worker": 0})
+    _send(worker, {"kind": "exec_done", "req": 9})
+    assert ch.poll(0.3) == []            # held, not dropped
+    assert ch.last_rx == 0.0             # the lease is NOT renewed
+    time.sleep(0.2)
+    msgs = ch.poll(0.1)                  # healed: queued traffic arrives late
+    assert [m["kind"] for m in msgs] == ["exec_done"]
+    assert ch.last_rx > 0.0
+
+
+def test_duplicate_frame_delivered_twice(channel_pair):
+    worker, parent = channel_pair
+    ch = FrameChannel(parent, worker_id=0, faults=FaultPlane(frame_dup_p=1.0))
+    _send(worker, {"kind": "exec_done", "req": 4})
+    msgs = ch.poll(0.5)
+    assert [m["req"] for m in msgs] == [4, 4]
+    assert ch.n_dup_frames == 1
+
+
+def test_delayed_frame_reordered_behind_next_poll(channel_pair):
+    worker, parent = channel_pair
+    ch = FrameChannel(parent, worker_id=0,
+                      faults=FaultPlane(frame_delay_p=1.0))
+    _send(worker, {"kind": "exec_done", "req": 1})
+    assert ch.poll(0.5) == []            # held for reorder
+    _send(worker, {"kind": "exec_done", "req": 2})
+    msgs = ch.poll(0.5)                  # old frame lands AFTER newer one
+    assert [m["req"] for m in msgs] == [1]  # req 2 now held in its place
+    assert ch.n_delayed_frames == 2
+
+
+def test_channel_eof_on_peer_close(channel_pair):
+    worker, parent = channel_pair
+    ch = FrameChannel(parent, worker_id=0)
+    worker.close()
+    assert ch.poll(0.2) == []
+    assert ch.eof
+
+
+# --------------------------------------------------------------------------
+# REPRO_FAULTS / REPRO_PROC grammar
+# --------------------------------------------------------------------------
+
+def test_faults_from_env_unknown_key_names_the_key():
+    """A typo in the REPRO_FAULTS grammar fails loudly, naming the bad
+    key and listing the known ones — not silently building a plane with
+    the fault dropped."""
+    with pytest.raises(ValueError) as exc:
+        FaultPlane.from_env("crash_evry=5,seed=7")
+    msg = str(exc.value)
+    assert "unknown key 'crash_evry'" in msg
+    assert "REPRO_FAULTS" in msg
+    assert "crash_every" in msg          # the fix is in the message
+
+
+def test_faults_from_env_proc_fault_keys():
+    """Process-level fault keys (and their aliases) are part of the
+    REPRO_FAULTS grammar."""
+    fp = FaultPlane.from_env(
+        "kill_every=3,max_kills=1,blackhole_exec=5,blackhole_for=0.4,"
+        "frame_dup_p=0.1,frame_delay_p=0.2,seed=9")
+    assert (fp.kill_every_execs, fp.max_kills, fp.blackhole_exec,
+            fp.blackhole_seconds) == (3, 1, 5, 0.4)
+    assert (fp.frame_dup_p, fp.frame_delay_p) == (0.1, 0.2)
+
+def test_proc_config_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_PROC",
+                       "hb_interval=0.02,hb_timeout=0.5,staging_entries=64")
+    cfg = ProcConfig.from_env()
+    assert (cfg.hb_interval, cfg.hb_timeout, cfg.staging_entries) == \
+        (0.02, 0.5, 64)
+    monkeypatch.delenv("REPRO_PROC")
+    assert ProcConfig.from_env() == ProcConfig()
+
+
+def test_proc_config_unknown_key_raises():
+    with pytest.raises(ValueError, match="unknown key 'hb_intervl'"):
+        ProcConfig.from_env("hb_intervl=0.02")
