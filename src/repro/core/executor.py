@@ -16,6 +16,7 @@ Two backends share this class:
 
 from __future__ import annotations
 
+import os
 import time as _time
 from collections import OrderedDict, deque
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
@@ -256,24 +257,120 @@ class Executor:
         )
 
 
+def _tree_bytes(tree: Any) -> float:
+    """Device bytes held by the array leaves of a components pytree
+    (jitted callables and plain python leaves count as zero)."""
+    total = 0.0
+    try:
+        import jax
+
+        leaves = jax.tree.leaves(tree)
+    except Exception:
+        return 0.0
+    for leaf in leaves:
+        nb = getattr(leaf, "nbytes", None)
+        if nb is not None:
+            total += float(nb)
+    return total
+
+
+class AdapterPool:
+    """Bounded LRU of DECODED adapter components, keyed by patch model_id.
+
+    The unfolded multi-LoRA serving mode applies adapters per row against
+    the shared base params, so the device state an adapter needs is just
+    its decoded A/B factors — this pool holds them with byte accounting
+    and LRU eviction, replacing the unbounded per-placement fold cache as
+    the steady-state residency for multi-tenant adapter traffic.
+    """
+
+    def __init__(self, capacity_bytes: Optional[float] = None) -> None:
+        if capacity_bytes is None:
+            capacity_bytes = float(os.environ.get(
+                "REPRO_ADAPTER_POOL_BYTES", 256 * 2**20))
+        self.capacity = float(capacity_bytes)
+        self._entries: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        self._bytes: Dict[str, float] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @property
+    def resident_bytes(self) -> float:
+        return sum(self._bytes.values())
+
+    def __contains__(self, patch_id: str) -> bool:
+        return patch_id in self._entries
+
+    def ids(self) -> List[str]:
+        return list(self._entries)
+
+    def _insert(self, patch_id: str, comps: Dict[str, Any]) -> None:
+        self._entries[patch_id] = comps
+        self._entries.move_to_end(patch_id)
+        self._bytes[patch_id] = _tree_bytes(comps)
+        while self.resident_bytes > self.capacity and len(self._entries) > 1:
+            victim, _ = self._entries.popitem(last=False)
+            self._bytes.pop(victim, None)
+            self.evictions += 1
+
+    def seed(self, patch_id: str, comps: Dict[str, Any]) -> None:
+        """Insert pre-decoded components (proc-plane staging path)."""
+        if patch_id in self._entries:
+            self._entries.move_to_end(patch_id)
+            return
+        self._insert(patch_id, comps)
+
+    def get(self, patch: Model) -> Tuple[Dict[str, Any], float]:
+        """Decoded components for ``patch`` (load on miss).  Returns
+        (components, measured load seconds — 0 on a hit)."""
+        pid = patch.model_id
+        if pid in self._entries:
+            self._entries.move_to_end(pid)
+            self.hits += 1
+            return self._entries[pid], 0.0
+        self.misses += 1
+        t0 = _time.perf_counter()
+        comps = patch.load(device=None)
+        dt = _time.perf_counter() - t0
+        self._insert(pid, comps)
+        return comps, dt
+
+    def drop(self, patch_id: str) -> None:
+        self._entries.pop(patch_id, None)
+        self._bytes.pop(patch_id, None)
+
+
 class LocalBackend:
     """Really-execute backend: loads params and runs ``Model.execute`` /
     ``Model.execute_batch`` on the host JAX device.  Used by the executable
     plane.
 
-    Caches two levels of device state:
+    Caches three levels of device state:
 
     * base components per ``model_id`` (includes LoRA adapters — an
       adapter's ``load()`` runs once, not once per denoising step);
-    * LoRA-folded parameter sets per ``(model_id, patch_ids)`` placement,
-      so patches fold once per placement instead of on every one of the
-      backbone's ``denoise_steps`` calls.
+    * LoRA-folded parameter sets per ``(model_id, patch_ids)`` placement —
+      a TRUE LRU under ``folded_budget_bytes`` (evictions append
+      ``("evict:<model_id>", 0)`` markers to ``forward_log``), so
+      per-placement folds can no longer grow without bound;
+    * an :class:`AdapterPool` of decoded A/B factors backing the unfolded
+      grouped multi-LoRA route (mixed-adapter batches never fold).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, folded_budget_bytes: Optional[float] = None,
+                 adapter_pool_bytes: Optional[float] = None) -> None:
         self._components: Dict[str, Dict[str, Any]] = {}
-        # (model_id, (patch_id, ...)) -> patched components
-        self._folded: Dict[Tuple[str, Tuple[str, ...]], Dict[str, Any]] = {}
+        # (model_id, (patch_id, ...)) -> patched components, LRU order
+        self._folded: "OrderedDict[Tuple[str, Tuple[str, ...]], Dict[str, Any]]" = OrderedDict()
+        self._folded_bytes: Dict[Tuple[str, Tuple[str, ...]], float] = {}
+        if folded_budget_bytes is None:
+            folded_budget_bytes = float(os.environ.get(
+                "REPRO_FOLD_CACHE_BYTES", 4 * 2**30))
+        self.folded_budget_bytes = float(folded_budget_bytes)
+        self.folded_evictions = 0
+        self.adapter_pool = AdapterPool(adapter_pool_bytes)
+        self.multilora_forwards = 0
         # (model_id, batch_size) per real forward — dispatch accounting
         self.forward_log: List[Tuple[str, int]] = []
         # cumulative measured device seconds (load folds + executes):
@@ -322,6 +419,7 @@ class LocalBackend:
             return comps, load_dt
         key = (model.model_id, tuple(p.model_id for p in patches))
         if key in self._folded:
+            self._folded.move_to_end(key)
             return self._folded[key], load_dt
         patch_comps = []
         for p in patches:
@@ -332,14 +430,26 @@ class LocalBackend:
         folded = model.fold_patches(comps, patches, patch_comps)
         load_dt += _time.perf_counter() - t0
         self._folded[key] = folded
+        self._folded_bytes[key] = _tree_bytes(folded)
+        while (sum(self._folded_bytes.values()) > self.folded_budget_bytes
+               and len(self._folded) > 1):
+            victim, _ = self._folded.popitem(last=False)
+            self._folded_bytes.pop(victim, None)
+            self.folded_evictions += 1
+            self.forward_log.append((f"evict:{victim[0]}", 0))
         return folded, load_dt
+
+    @property
+    def folded_resident_bytes(self) -> float:
+        return sum(self._folded_bytes.values())
 
     def unload(self, model_id: str) -> None:
         self._components.pop(model_id, None)
-        self._folded = {
-            k: v for k, v in self._folded.items()
-            if k[0] != model_id and model_id not in k[1]
-        }
+        self.adapter_pool.drop(model_id)
+        for k in [k for k in self._folded
+                  if k[0] == model_id or model_id in k[1]]:
+            del self._folded[k]
+            self._folded_bytes.pop(k, None)
 
     @staticmethod
     def _block(out: Any) -> None:
@@ -399,7 +509,11 @@ class LocalBackend:
         """One stacked forward for a whole ScheduledBatch.  Returns
         (per-request outputs, load seconds, execute seconds)."""
         self._maybe_inject_fault()
-        patches, clean, _ = self._lift_patches(batch_kwargs, patches)
+        patches, clean, uniform = self._lift_patches(batch_kwargs, patches)
+        if not uniform and getattr(model, "supports_multilora", False):
+            res = self._execute_batch_multilora(model, batch_kwargs)
+            if res is not None:
+                return res
         comps, load_dt = self.components_for(model, patches)
         model._batch_was_stacked = True
         t0 = _time.perf_counter()
@@ -411,6 +525,34 @@ class LocalBackend:
         else:   # model fell back to per-request execution: log what ran
             self.forward_log.extend(
                 (model.model_id, 1) for _ in batch_kwargs)
+        self.exec_seconds += load_dt + exec_dt
+        return outs, load_dt, exec_dt
+
+    def _execute_batch_multilora(
+        self, model: Model, batch_kwargs: List[Dict[str, Any]]
+    ) -> Optional[Tuple[List[Dict[str, Any]], float, float]]:
+        """Unfolded grouped route for a batch MIXING adapters: resolve each
+        request's patch through the adapter pool and hand the batch (with
+        its per-request ``_patches``) to ``execute_batch_multilora``.  The
+        base components stay pristine — no fold, no patch-state mutation.
+        Returns None when the model declines (the caller then falls back
+        to the per-request fold path)."""
+        comps, load_dt = self.ensure_loaded(model)
+        adapters: Dict[str, Dict[str, Any]] = {}
+        for kw in batch_kwargs:
+            for p in kw.get("_patches") or []:
+                if p.model_id not in adapters:
+                    pc, pdt = self.adapter_pool.get(p)
+                    load_dt += pdt
+                    adapters[p.model_id] = pc
+        t0 = _time.perf_counter()
+        outs = model.execute_batch_multilora(comps, batch_kwargs, adapters)
+        if outs is None:
+            return None
+        self._block(outs)
+        exec_dt = _time.perf_counter() - t0
+        self.multilora_forwards += 1
+        self.forward_log.append((model.model_id, len(batch_kwargs)))
         self.exec_seconds += load_dt + exec_dt
         return outs, load_dt, exec_dt
 

@@ -43,6 +43,17 @@ class ModelCost:
                           per-step terms (``flops_per_item`` etc.) describe
                           ONE step; segment cost = S× per-step cost with
                           the fixed dispatch overhead paid once.
+
+    Multi-adapter serving terms (all default 0 — no effect unless the
+    model declares them):
+
+    ``lora_rank``           — rank of the adapters this model serves;
+    ``lora_flops_per_rank`` — extra FLOPs per item PER RANK the grouped
+                              unfolded forward adds (the two skinny
+                              matmuls x·A and (x·A)·B);
+    ``lora_bytes_per_adapter`` — HBM bytes one resident adapter's decoded
+                              A/B factors stream per forward (adapter-
+                              count term for admission and pricing).
     """
 
     def __init__(
@@ -55,6 +66,9 @@ class ModelCost:
         max_batch: int = 8,
         calls_per_request: int = 1,
         steps_per_call: int = 1,
+        lora_rank: int = 0,
+        lora_flops_per_rank: float = 0.0,
+        lora_bytes_per_adapter: float = 0.0,
     ) -> None:
         self.flops_per_item = float(flops_per_item)
         self.param_bytes = float(param_bytes)
@@ -64,6 +78,9 @@ class ModelCost:
         self.max_batch = int(max_batch)
         self.calls_per_request = int(calls_per_request)
         self.steps_per_call = int(steps_per_call)
+        self.lora_rank = int(lora_rank)
+        self.lora_flops_per_rank = float(lora_flops_per_rank)
+        self.lora_bytes_per_adapter = float(lora_bytes_per_adapter)
 
 
 class Model(abc.ABC):
@@ -226,6 +243,30 @@ class Model(abc.ABC):
         """Per-request fallback when a batch cannot be stacked soundly."""
         self._batch_was_stacked = False
         return [self.execute(model_components, **kw) for kw in batch_kwargs]
+
+    # -------------------------------------------- multi-adapter execution
+    # True when the model can run one stacked forward for a batch whose
+    # requests carry DIFFERENT weight patches (grouped multi-LoRA, §2.1):
+    # the scheduler then stops partitioning batches by patch set, and the
+    # backend routes mixed batches to :meth:`execute_batch_multilora`.
+    supports_multilora: bool = False
+
+    def execute_batch_multilora(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        adapters: Dict[str, Dict[str, Any]],
+    ) -> Optional[List[Dict[str, Any]]]:
+        """Run one stacked forward for a batch mixing adapters (§5.1).
+
+        ``batch_kwargs`` keep their per-request ``_patches`` entries (the
+        adapter :class:`Model` objects); ``adapters`` maps each patch
+        ``model_id`` to its decoded components (from the backend's adapter
+        pool), so implementations never call ``patch.load()`` themselves.
+        Returns per-request outputs, or ``None`` to decline — the backend
+        then falls back to the per-request fold path.
+        """
+        return None
 
     # ------------------------------------------------- sharded execution
     def clamp_parallelism(self, batch_size: int, k: int) -> int:

@@ -97,15 +97,29 @@ class LatencyProfile:
 
     # ------------------------------------------------------------ queries
     def infer_time(self, batch: int, k: int = 1,
-                   steps: Optional[int] = None) -> float:
+                   steps: Optional[int] = None, adapters: int = 0) -> float:
         """Seconds for one call.  For segment models the per-step terms
         repeat ``steps`` times (weights re-stream from HBM and collectives
         re-synchronize every step) while the fixed dispatch overhead is
         paid ONCE — the analytic form of what segment fusion buys.
-        ``steps=None`` means the model's full ``steps_per_call``."""
+        ``steps=None`` means the model's full ``steps_per_call``.
+
+        ``adapters`` is the count of DISTINCT LoRA adapters a mixed
+        multi-tenant batch carries: the grouped unfolded forward adds the
+        skinny per-rank matmuls for every row (a compute term scaled by
+        the model's ``lora_rank``) and streams each resident adapter's
+        A/B factors from HBM once per step (a memory term scaled by the
+        adapter count) — the rank/adapter pricing the scheduler and
+        admission controller use for multi-LoRA batches."""
         k = max(1, min(k, self.cost.max_parallelism))
         s = self.cost.steps_per_call if steps is None else max(1, int(steps))
         t = max(self.compute_term(batch, k), self.memory_term(batch, k))
+        if adapters > 0:
+            c = self.cost
+            lora_flops = batch * c.lora_flops_per_rank * max(1, c.lora_rank)
+            lora_bytes = adapters * c.lora_bytes_per_adapter
+            t += (lora_flops / (0.6 * self.hw.peak_flops)
+                  + lora_bytes / self.hw.hbm_bw)
         return s * (t + self.collective_term(batch, k)) + self.hw.dispatch_overhead
 
     def speedup(self, batch: int, k: int) -> float:
@@ -161,9 +175,14 @@ def node_segment_steps(node: Any) -> Optional[int]:
 
 def node_infer_time(profiles: "ProfileStore", node: Any,
                     batch: int = 1, k: int = 1) -> float:
-    """Analytic inference seconds for one workflow node (segment-aware)."""
+    """Analytic inference seconds for one workflow node (segment-aware).
+    Patched nodes on multi-LoRA-capable models carry the unfolded
+    grouped forward's rank/adapter term."""
+    adapters = 0
+    if getattr(node.op, "supports_multilora", False):
+        adapters = len(getattr(node.op, "patches", []) or [])
     return profiles.profile_model(node.op).infer_time(
-        batch, k, steps=node_segment_steps(node))
+        batch, k, steps=node_segment_steps(node), adapters=adapters)
 
 
 class ProfileStore:

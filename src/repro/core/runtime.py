@@ -916,7 +916,11 @@ class Coordinator:
                 ex.mark_loaded(batch.model_id, profile.param_bytes)
             else:
                 ex.touch(batch.model_id)
-            ex.set_patches(batch.model_id, list(batch.nodes[0].effective_patches))
+            if not batch.multilora:
+                # grouped multi-LoRA batches never mutate the executor's
+                # folded patch state: per-request adapters ride the
+                # backend's adapter pool, the resident base stays pristine
+                ex.set_patches(batch.model_id, list(batch.nodes[0].effective_patches))
         # account input fetches into the lead executor's store (chaos: a
         # transfer may be lost in flight past its retry budget)
         try:
@@ -1058,16 +1062,26 @@ class Coordinator:
         for rn in batch.nodes:
             groups.setdefault(type(rn.node.op), []).append(rn)
         proc = self._proc
+        multilora = batch.multilora
         for rns in groups.values():
             lead = rns[0]
             op = lead.node.op
             is_segment = getattr(op, "is_segment", False)
             effective = lead.effective_patches
             patches = [p for p in op.patches if p.model_id in effective]
+            if multilora:
+                # mixed-adapter batch: patches travel per request as a
+                # ``_patches`` kwarg so the backend can route the batch to
+                # the grouped unfolded forward (adapter pool, no fold)
+                patches = []
             batch_kwargs: List[Dict[str, Any]] = []
             out_keys: List[Dict[str, str]] = []
             for rn in rns:
                 kwargs: Dict[str, Any] = {}
+                if multilora:
+                    eff = rn.effective_patches
+                    kwargs["_patches"] = [
+                        p for p in rn.node.op.patches if p.model_id in eff]
                 for name, v in rn.node.inputs.items():
                     if isinstance(v, ValueRef):
                         key = rn.request.ref_key(v)

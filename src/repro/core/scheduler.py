@@ -41,6 +41,11 @@ class ScheduledBatch:
     # segment nodes only: how many fused denoise steps this dispatch runs
     # (the load-adaptive chunk); 1 for ordinary nodes
     segment_steps: int = 1
+    # True when the batch mixes requests with DIFFERENT effective patch
+    # sets (grouped multi-LoRA): the coordinator then routes per-request
+    # patches through the backend's adapter pool instead of mutating the
+    # executors' folded patch state
+    multilora: bool = False
 
     @property
     def duration(self) -> float:
@@ -61,6 +66,7 @@ class Scheduler:
         use_declared_max_batch: bool = False,
         mesh: Optional[Any] = None,
         segment_chunk: Optional[int] = None,
+        multilora: bool = True,
     ) -> None:
         self.profiles = profiles
         self.adaptive_parallelism = adaptive_parallelism
@@ -82,6 +88,12 @@ class Scheduler:
         # fixed segment chunk size (benchmark/ablation knob); None means
         # load-adaptive chunking via choose_segment_steps
         self.segment_chunk = segment_chunk
+        # multi-tenant adapter batching: when the model declares
+        # supports_multilora, stop partitioning batches by patch set —
+        # requests carrying different LoRAs share one grouped forward.
+        # False restores strict per-patch-set batching (the fold-cache
+        # arm of the multitenant benchmark)
+        self.multilora = multilora
 
     # ----------------------------------------------------------- ordering
     @staticmethod
@@ -111,7 +123,23 @@ class Scheduler:
         for rn in ready:
             if len(batch) >= max_batch:
                 break
-            if rn is not head and rn.batch_key == head.batch_key:
+            if rn is head:
+                continue
+            if rn.batch_key == head.batch_key:
+                batch.append(rn)
+            elif (
+                self.multilora
+                and rn.model_id == head.model_id
+                and getattr(getattr(head, "node", None), "op", None) is not None
+                and getattr(head.node.op, "supports_multilora", False)
+                and len(head.effective_patches) <= 1
+                and len(rn.effective_patches) <= 1
+            ):
+                # grouped multi-LoRA (§5.1 extended): the model runs one
+                # stacked forward applying a DIFFERENT adapter per row, so
+                # requests for different tenants share the batch.  Bounded
+                # to single-patch requests — the grouped kernel indexes one
+                # adapter per row
                 batch.append(rn)
         return batch
 
@@ -187,22 +215,33 @@ class Scheduler:
         k: int,
         data_fetch_cost: Callable[[List[Any], int], float],
         steps: int = 1,
+        multilora: bool = False,
     ) -> Tuple[List[Executor], float, float, float, float]:
         """Returns (k best executors, l_data, l_load, l_infer, patch_swap)
         evaluated at the chosen placement."""
         model_id = batch[0].model_id
         profile = self.profiles.get(model_id)
         want_patches = list(batch[0].effective_patches)
+        adapters = 0
+        if multilora:
+            # unfolded grouped serving: adapters ride the executor's pool,
+            # never fold into resident params — no hot-patch swap is paid
+            # anywhere, and the infer estimate instead carries the grouped
+            # forward's rank/adapter term
+            adapters = len({p for rn in batch for p in rn.effective_patches})
         scored: List[Tuple[float, float, float, float, Executor]] = []
         for e in executors:
             l_data = data_fetch_cost(batch, e.id)
             l_load = 0.0 if e.has_model(model_id) else profile.load_time()
             swap = 0.0
-            if e.has_model(model_id) and e.patches_on(model_id) != want_patches:
+            if multilora:
+                pass
+            elif e.has_model(model_id) and e.patches_on(model_id) != want_patches:
                 swap = self.profiles.hw.patch_swap_time
             elif not e.has_model(model_id) and want_patches:
                 swap = self.profiles.hw.patch_swap_time
-            l_infer = profile.infer_time(len(batch), k, steps=steps)
+            l_infer = profile.infer_time(len(batch), k, steps=steps,
+                                         adapters=adapters)
             score = l_data + l_load + swap + l_infer
             scored.append((score, l_data, l_load, swap, e))
         # equal-score tie-break: executors the autoscaler assigned to this
@@ -235,7 +274,8 @@ class Scheduler:
             [s[4] for s in top],
             lead[1],
             max(s[2] for s in top),   # parallel loads overlap; bound by max
-            self.profiles.get(model_id).infer_time(len(batch), k, steps=steps),
+            self.profiles.get(model_id).infer_time(len(batch), k, steps=steps,
+                                                   adapters=adapters),
             max(s[3] for s in top),
         )
 
@@ -286,8 +326,9 @@ class Scheduler:
                 # not enough free executors, or the free ones share devices
                 # and cannot assemble a k-wide submesh
                 break
+            ml = any(rn.batch_key != head.batch_key for rn in batch)
             targets, l_data, l_load, l_infer, swap = self.score_executors(
-                batch, avail, k, data_fetch_cost, steps=chunk
+                batch, avail, k, data_fetch_cost, steps=chunk, multilora=ml
             )
             decisions.append(
                 ScheduledBatch(
@@ -301,6 +342,7 @@ class Scheduler:
                     l_infer=l_infer,
                     patch_swap=swap,
                     segment_steps=chunk,
+                    multilora=ml,
                 )
             )
             dispatched = set(id(n) for n in batch)

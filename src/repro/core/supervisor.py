@@ -226,6 +226,20 @@ def _worker_main(host: str, port: int, worker_id: int, hb_interval: float,
                                        decode_value(spec[2]), staging_cap)
                         elif spec[0] == "ref" and spec[1] not in staging:
                             need.add(spec[1])
+                # decoded multi-LoRA factors: seed the adapter pool from
+                # shipped payloads; bare refs missing from both the pool
+                # and the staging store go through the need protocol
+                adapters = msg.get("adapters") or {}
+                for pid, spec in adapters.items():
+                    if spec[0] == "ship":
+                        comps = decode_value(spec[2])
+                        _stage_put(staging, spec[1], comps, staging_cap)
+                        backend.adapter_pool.seed(pid, comps)
+                    elif pid not in backend.adapter_pool:
+                        if spec[1] in staging:
+                            backend.adapter_pool.seed(pid, staging[spec[1]])
+                        else:
+                            need.add(spec[1])
                 if need:
                     send({"kind": "need", "req": msg["req"],
                           "worker": worker_id, "keys": sorted(need)})
@@ -237,6 +251,9 @@ def _worker_main(host: str, port: int, worker_id: int, hb_interval: float,
                                            decode_value(payload), staging_cap)
                         elif m2.get("kind") == "shutdown":
                             return
+                    for pid, spec in adapters.items():
+                        if spec[0] == "ref" and pid not in backend.adapter_pool:
+                            backend.adapter_pool.seed(pid, staging[spec[1]])
                 kws: List[Dict[str, Any]] = []
                 for entry in entries:
                     kw: Dict[str, Any] = {}
@@ -425,6 +442,10 @@ class ProcBackend(LocalBackend):
         self.staging_hits = 0       # keyed inputs sent as a bare key
         self.staging_ships = 0      # keyed inputs shipped as payload
         self.bytes_shipped = 0      # serialized tensor bytes sent
+        # multi-LoRA adapter shipping (decoded A/B factors ride the same
+        # staging protocol under synthetic ``adapter:<model_id>`` keys)
+        self.adapter_ships = 0      # adapter factor sets shipped as payload
+        self.adapter_hits = 0       # ... sent as a bare staged ref
 
     # ------------------------------------------------------------- wiring
     def attach_coordinator(self, co: Any) -> None:
@@ -558,10 +579,37 @@ class ProcBackend(LocalBackend):
         okeys = list(out_keys or ())
         while len(okeys) < len(entries):
             okeys.append({})
+        # grouped multi-LoRA: per-request ``_patches`` ride the batch
+        # entries (tiny adapter Model objects), while the DECODED A/B
+        # factors ship through the staging protocol under synthetic
+        # ``adapter:<model_id>`` keys — a worker that already staged an
+        # adapter gets a bare ref, a restarted worker re-ships only what
+        # it is missing (the need protocol covers LRU evictions)
+        adapter_specs: Dict[str, Any] = {}
+        for kw in batch_kwargs:
+            for p in kw.get("_patches") or []:
+                pid = p.model_id
+                if pid in adapter_specs:
+                    continue
+                akey = f"adapter:{pid}"
+                comps, _ = self.adapter_pool.get(p)
+                shippable[akey] = comps
+                if (self.engine is not None
+                        and self.engine.is_staged(executor_id, akey)):
+                    self.adapter_hits += 1
+                    adapter_specs[pid] = ("ref", akey)
+                else:
+                    payload, dt = self._encode(akey, comps)
+                    ser += dt
+                    self.adapter_ships += 1
+                    self.bytes_shipped += len(payload)
+                    adapter_specs[pid] = ("ship", akey, payload)
         self._req_seq += 1
         msg = {"kind": "exec", "req": self._req_seq, "epoch": h.epoch,
                "op": model, "patches": list(patches or ()),
                "batch": entries, "out_keys": okeys}
+        if adapter_specs:
+            msg["adapters"] = adapter_specs
         t0 = _time.perf_counter()
         h.channel.send(msg)
         if self._faults is not None:

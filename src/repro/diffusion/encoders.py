@@ -21,6 +21,7 @@ from repro.nn.layers import (
     embed_init,
     gelu_mlp,
     gqa_attention,
+    grouped_lora_dense,
     init_mlp,
     layer_norm,
     rms_norm,
@@ -67,11 +68,19 @@ def init_text_encoder(
     }
 
 
-def text_encoder_apply(params: Params, token_ids: jax.Array, n_heads: int) -> jax.Array:
-    """token_ids [B, S] -> embeddings [B, S, d]."""
+def text_encoder_apply(params: Params, token_ids: jax.Array, n_heads: int,
+                       lora_stack: Params | None = None,
+                       lora_idx: jax.Array | None = None) -> jax.Array:
+    """token_ids [B, S] -> embeddings [B, S, d].
+
+    ``lora_stack`` (from :func:`repro.diffusion.lora.stack_text_loras`)
+    plus a per-row ``lora_idx`` [B] run the grouped multi-adapter form of
+    the LAST layer's output projection; rows with ``idx < 0`` stay plain.
+    """
     b, s = token_ids.shape
     x = params["tok"][token_ids] + params["pos"][None, :s]
-    for p in params["layers"]:
+    n_layers = len(params["layers"])
+    for li, p in enumerate(params["layers"]):
         h = rms_norm(x, p["norm1"])
         bb, ss, d = h.shape
         hd = d // n_heads
@@ -79,7 +88,12 @@ def text_encoder_apply(params: Params, token_ids: jax.Array, n_heads: int) -> ja
         k = (h @ p["wk"]).reshape(bb, ss, n_heads, hd)
         v = (h @ p["wv"]).reshape(bb, ss, n_heads, hd)
         attn = gqa_attention(q, k, v, causal=False).reshape(bb, ss, d)
-        x = x + attn @ p["wo"]
+        if lora_stack is not None and li == n_layers - 1:
+            x = x + grouped_lora_dense(
+                attn, p["wo"], lora_stack["a"], lora_stack["b"],
+                lora_idx.astype(jnp.int32), lora_stack["scales"])
+        else:
+            x = x + attn @ p["wo"]
         x = x + gelu_mlp(p["mlp"], rms_norm(x, p["norm2"]))
     return rms_norm(x, params["final"])
 

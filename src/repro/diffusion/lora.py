@@ -15,7 +15,7 @@ Two application modes:
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -74,3 +74,86 @@ def unfold_lora(params: Params, lora: Params) -> Params:
     neg = dict(lora)
     neg["scale"] = -lora["scale"]
     return fold_lora(params, neg)
+
+
+def _pad_rank(x: jax.Array, axis: int, rank: int) -> jax.Array:
+    pad = rank - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)      # zero rank columns contribute exactly 0
+
+
+def stack_loras(loras: Sequence[Params]) -> Params:
+    """Stack G per-adapter LoRA params into the grouped layout the
+    batched multi-LoRA forward consumes.
+
+    Adapters with different ranks are zero-padded to the largest rank
+    (exact: extra zero columns of A / rows of B contribute nothing).
+    Returns, per target ``t``:
+
+    * ``{t}_a``: ``[L, G, d, r]`` and ``{t}_b``: ``[L, G, r, d]`` — the
+      layer axis LEADS so the stacks ride the mmdit layer scan's xs
+      (each scan step sees this layer's ``[G, d, r]`` factors);
+    * ``scales``: ``[G]`` (closed over, not scanned).
+    """
+    if not loras:
+        raise ValueError("stack_loras needs at least one adapter")
+    rank = max(p[f"{TARGETS[0]}_a"].shape[-1] for p in loras)
+    out: Params = {
+        "scales": jnp.stack([jnp.asarray(p["scale"], jnp.float32)
+                             for p in loras]),
+    }
+    for t in TARGETS:
+        a = jnp.stack([_pad_rank(p[f"{t}_a"], 2, rank) for p in loras])
+        b = jnp.stack([_pad_rank(p[f"{t}_b"], 1, rank) for p in loras])
+        out[f"{t}_a"] = a.transpose(1, 0, 2, 3)     # [G,L,d,r] -> [L,G,d,r]
+        out[f"{t}_b"] = b.transpose(1, 0, 2, 3)     # [G,L,r,d] -> [L,G,r,d]
+    return out
+
+
+# ------------------------------------------------- text-encoder adapters
+#
+# A lightweight companion to the backbone LoRA: a low-rank delta on the
+# LAST text-encoder layer's output projection (``wo``).  Folding adds
+# ``scale * a @ b`` to that weight; the grouped path applies it per row.
+
+def init_text_lora(key: jax.Array, d_model: int, rank: int = 8,
+                   scale: float = 1.0, amplitude: float = 0.02,
+                   dtype: Any = jnp.float32) -> Params:
+    ka, kb = jax.random.split(key)
+    return {
+        "a": (jax.random.normal(ka, (d_model, rank), dtype=jnp.float32)
+              * (1.0 / jnp.sqrt(d_model))).astype(dtype),
+        "b": (jax.random.normal(kb, (rank, d_model), dtype=jnp.float32)
+              * amplitude).astype(dtype),
+        "scale": jnp.asarray(scale, dtype),
+    }
+
+
+def fold_text_lora(params: Params, tl: Params, sign: float = 1.0) -> Params:
+    """Text-encoder params with the adapter folded into the last layer's
+    ``wo`` (functional)."""
+    delta = (tl["a"] @ tl["b"]) * tl["scale"] * sign
+    layers = list(params["layers"])
+    last = dict(layers[-1])
+    last["wo"] = last["wo"] + delta.astype(last["wo"].dtype)
+    layers[-1] = last
+    out = dict(params)
+    out["layers"] = layers
+    return out
+
+
+def stack_text_loras(tls: Sequence[Params]) -> Params:
+    """Stack G text-encoder adapters: ``a [G,d,r]``, ``b [G,r,d]``,
+    ``scales [G]`` (ranks zero-padded to the largest)."""
+    if not tls:
+        raise ValueError("stack_text_loras needs at least one adapter")
+    rank = max(p["a"].shape[-1] for p in tls)
+    return {
+        "a": jnp.stack([_pad_rank(p["a"], 1, rank) for p in tls]),
+        "b": jnp.stack([_pad_rank(p["b"], 0, rank) for p in tls]),
+        "scales": jnp.stack([jnp.asarray(p["scale"], jnp.float32)
+                             for p in tls]),
+    }

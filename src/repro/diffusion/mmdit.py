@@ -27,6 +27,7 @@ from repro.nn.layers import (
     dense_init,
     flash_attention_enabled,
     gqa_attention,
+    grouped_lora_dense,
     modulate,
     rms_norm,
     shard_map_compat,
@@ -61,7 +62,20 @@ def init_layer(key: jax.Array, cfg: DiTConfig) -> Params:
     return {"img": _init_stream(k1, cfg), "txt": _init_stream(k2, cfg)}
 
 
-def _stream_qkv(p: Params, x: jax.Array, t_emb: jax.Array, n_heads: int):
+def _lora_proj(h: jax.Array, w: jax.Array, lora, target: str) -> jax.Array:
+    """``h @ w``, or the grouped per-row multi-LoRA projection when this
+    layer carries adapter stacks for ``target``.  ``lora`` is
+    ``(layer_stacks, idx, scales)`` with ``layer_stacks[f"{target}_a"]``
+    ``[G, d, r]`` / ``..._b`` ``[G, r, d]``."""
+    if lora is None:
+        return h @ w
+    stacks, idx, scales = lora
+    return grouped_lora_dense(h, w, stacks[f"{target}_a"],
+                              stacks[f"{target}_b"], idx, scales)
+
+
+def _stream_qkv(p: Params, x: jax.Array, t_emb: jax.Array, n_heads: int,
+                lora=None):
     ada = jax.nn.silu(t_emb) @ p["ada"] + p["ada_b"]
     (s1, g1, m1, s2, g2, m2) = jnp.split(ada, 6, axis=-1)
     m1 = 1.0 + m1          # gate baseline: identity-plus-delta
@@ -69,18 +83,19 @@ def _stream_qkv(p: Params, x: jax.Array, t_emb: jax.Array, n_heads: int):
     h = modulate(rms_norm(x, p["norm1"]), s1, g1).astype(x.dtype)
     b, s, d = h.shape
     hd = d // n_heads
-    q = (h @ p["wq"]).reshape(b, s, n_heads, hd)
-    k = (h @ p["wk"]).reshape(b, s, n_heads, hd)
-    v = (h @ p["wv"]).reshape(b, s, n_heads, hd)
+    q = _lora_proj(h, p["wq"], lora, "wq").reshape(b, s, n_heads, hd)
+    k = _lora_proj(h, p["wk"], lora, "wk").reshape(b, s, n_heads, hd)
+    v = _lora_proj(h, p["wv"], lora, "wv").reshape(b, s, n_heads, hd)
     return q, k, v, (m1, s2, g2, m2)
 
 
-def _stream_post(p: Params, x: jax.Array, attn_out: jax.Array, mods, n_heads: int):
+def _stream_post(p: Params, x: jax.Array, attn_out: jax.Array, mods, n_heads: int,
+                 lora=None):
     m1, s2, g2, m2 = mods
     b, s, _, _ = attn_out.shape
     # keep the residual stream in the param dtype (t_emb gates are f32)
-    x = x + (m1[:, None, :] * (attn_out.reshape(b, s, -1) @ p["wo"])
-             ).astype(x.dtype)
+    proj = _lora_proj(attn_out.reshape(b, s, -1), p["wo"], lora, "wo")
+    x = x + (m1[:, None, :] * proj).astype(x.dtype)
     h = modulate(rms_norm(x, p["norm2"]), s2, g2).astype(x.dtype)
     x = x + (m2[:, None, :] * (jax.nn.gelu(h @ p["w1"]) @ p["w2"])
              ).astype(x.dtype)
@@ -93,8 +108,9 @@ def mmdit_block(
     c: jax.Array,            # text tokens  [B, Tc, d]
     t_emb: jax.Array,        # [B, d]
     n_heads: int,
+    lora=None,               # (layer adapter stacks, idx [B], scales [G])
 ) -> Tuple[jax.Array, jax.Array]:
-    qi, ki, vi, mods_i = _stream_qkv(p["img"], x, t_emb, n_heads)
+    qi, ki, vi, mods_i = _stream_qkv(p["img"], x, t_emb, n_heads, lora=lora)
     qt, kt, vt, mods_t = _stream_qkv(p["txt"], c, t_emb, n_heads)
     q = jnp.concatenate([qt, qi], axis=1)
     k = jnp.concatenate([kt, ki], axis=1)
@@ -102,7 +118,7 @@ def mmdit_block(
     out = gqa_attention(q, k, v, causal=False)
     tc = c.shape[1]
     out_t, out_i = out[:, :tc], out[:, tc:]
-    x = _stream_post(p["img"], x, out_i, mods_i, n_heads)
+    x = _stream_post(p["img"], x, out_i, mods_i, n_heads, lora=lora)
     c = _stream_post(p["txt"], c, out_t, mods_t, n_heads)
     return x, c
 
@@ -158,22 +174,45 @@ def mmdit_apply(
     t: jax.Array,                             # [B]
     text_emb: jax.Array,                      # [B, Tc, text_dim]
     control_residuals: Optional[jax.Array] = None,   # [L, B, Ti, d] (padded)
+    lora_stack: Optional[Params] = None,      # stack_loras output ([L,G,...])
+    lora_idx: Optional[jax.Array] = None,     # [B] int32; -1 = no adapter
 ) -> jax.Array:
-    """One denoising forward pass; returns the velocity/noise prediction."""
+    """One denoising forward pass; returns the velocity/noise prediction.
+
+    When ``lora_stack``/``lora_idx`` are given, the image-stream attention
+    projections run the grouped multi-adapter form: each batch row applies
+    its own LoRA (``lora_idx[b]``) against the shared base weights.  The
+    layer-leading adapter stacks ride the layer scan's xs alongside the
+    params, so the whole multi-tenant forward stays one jitted scan."""
     x, c, t_emb = _embed_inputs(params, cfg, latents, t, text_emb)
     if control_residuals is None:
         control_residuals = jnp.zeros(
             (cfg.n_layers,) + x.shape, dtype=x.dtype
         )
 
+    if lora_stack is None:
+        scales = idx = None
+        lora_xs = None
+    else:
+        scales = lora_stack["scales"]
+        idx = lora_idx.astype(jnp.int32)
+        lora_xs = {k: v for k, v in lora_stack.items() if k != "scales"}
+
     def body(carry, xs):
         x, c = carry
-        layer_p, res = xs
-        x, c = mmdit_block(layer_p, x, c, t_emb, cfg.n_heads)
+        if lora_xs is None:
+            layer_p, res = xs
+            lora = None
+        else:
+            layer_p, res, layer_lora = xs
+            lora = (layer_lora, idx, scales)
+        x, c = mmdit_block(layer_p, x, c, t_emb, cfg.n_heads, lora=lora)
         x = x + res
         return (x, c), None
 
-    (x, c), _ = jax.lax.scan(body, (x, c), (params["layers"], control_residuals))
+    xs = ((params["layers"], control_residuals) if lora_xs is None
+          else (params["layers"], control_residuals, lora_xs))
+    (x, c), _ = jax.lax.scan(body, (x, c), xs)
     ada = jax.nn.silu(t_emb) @ params["final_ada"] + params["final_ada_b"]
     shift, scale = jnp.split(ada, 2, axis=-1)
     x = modulate(rms_norm(x, params["final_norm"]), shift, scale)

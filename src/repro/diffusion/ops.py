@@ -12,6 +12,7 @@ both for backwards compatibility.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -33,7 +34,15 @@ from repro.diffusion.encoders import (
     vae_decode,
     vae_encode,
 )
-from repro.diffusion.lora import fold_lora, init_lora, randomize_lora
+from repro.diffusion.lora import (
+    fold_lora,
+    fold_text_lora,
+    init_lora,
+    init_text_lora,
+    randomize_lora,
+    stack_loras,
+    stack_text_loras,
+)
 from repro.diffusion.mmdit import (
     controlnet_apply,
     init_controlnet,
@@ -79,6 +88,52 @@ def _mesh_fn_cache(model_components: Dict[str, Any]) -> Dict[Any, Any]:
     return model_components.setdefault("_sharded_fns", {})
 
 
+_ML_STACK_CACHE_CAP = 16
+
+
+def _cached_lora_stack(comps: Dict[str, Any], order: Tuple[str, ...],
+                       adapters: Dict[str, Dict[str, Any]],
+                       cache_key: str = "_ml_stacks",
+                       field: str = "lora", build: Any = stack_loras) -> Any:
+    """Grouped adapter stacks, cached per adapter ordering on the
+    components dict (small LRU — a stack is a device-resident concat of
+    the pool's decoded factors, rebuilt only when the tenant mix of a
+    batch changes)."""
+    cache = comps.setdefault(cache_key, OrderedDict())
+    if order in cache:
+        cache.move_to_end(order)
+        return cache[order]
+    stack = build([adapters[pid][field] for pid in order])
+    cache[order] = stack
+    while len(cache) > _ML_STACK_CACHE_CAP:
+        cache.popitem(last=False)
+    return stack
+
+
+def _multilora_groups(batch_kwargs: List[Dict[str, Any]],
+                      adapters: Dict[str, Dict[str, Any]],
+                      field: str = "lora") -> Optional[Tuple]:
+    """Per-request adapter grouping for a mixed batch: returns
+    ``(order, per_request_idx)`` with ``order`` the distinct adapter ids
+    (first-appearance order) and ``per_request_idx[i]`` the group of
+    request i (-1 = unpatched), or ``None`` when the batch is outside the
+    grouped form (a request with >1 patch, or no adapters at all)."""
+    patch_ids = [tuple(p.model_id for p in kw.get("_patches") or [])
+                 for kw in batch_kwargs]
+    if any(len(ps) > 1 for ps in patch_ids):
+        return None
+    order: List[str] = []
+    for ps in patch_ids:
+        for pid in ps:
+            if pid not in order and field in adapters.get(pid, {}):
+                order.append(pid)
+    if not order:
+        return None
+    g_of = {pid: g for g, pid in enumerate(order)}
+    per_req = [g_of.get(ps[0], -1) if ps else -1 for ps in patch_ids]
+    return tuple(order), per_req
+
+
 # --------------------------------------------------------------------------
 # Component models
 # --------------------------------------------------------------------------
@@ -117,6 +172,8 @@ class LatentsGenerator(Model):
 
 
 class TextEncoder(Model):
+    supports_multilora = True
+
     def __init__(self, family: DiffusionFamily) -> None:
         self.family = family
         super().__init__(model_id=f"text_encoder:{family.name}")
@@ -133,7 +190,43 @@ class TextEncoder(Model):
             max_len=cfg.text_tokens,
         )
         apply = jax.jit(lambda p, ids: text_encoder_apply(p, ids, n_heads=4))
-        return {"params": params, "apply": apply}
+        apply_ml = jax.jit(
+            lambda p, ids, stack, idx: text_encoder_apply(
+                p, ids, n_heads=4, lora_stack=stack, lora_idx=idx))
+        return {"params": params, "apply": apply, "apply_ml": apply_ml}
+
+    def fold_patches(
+        self,
+        components: Dict[str, Any],
+        patches: List[Model],
+        patch_components: List[Dict[str, Any]],
+    ) -> Dict[str, Any]:
+        params = components["params"]
+        for pc in patch_components:
+            if "text_lora" in pc:
+                params = fold_text_lora(params, pc["text_lora"])
+        return {**components, "params": params}
+
+    def execute_batch_multilora(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        adapters: Dict[str, Dict[str, Any]],
+    ) -> Optional[List[Dict[str, Any]]]:
+        groups = _multilora_groups(batch_kwargs, adapters, field="text_lora")
+        apply_ml = model_components.get("apply_ml")
+        if groups is None or apply_ml is None:
+            return None
+        order, per_req = groups
+        stack = _cached_lora_stack(
+            model_components, order, adapters, cache_key="_ml_text_stacks",
+            field="text_lora", build=stack_text_loras)
+        cfg = self.family.toy
+        ids = tokenize_batch([kw["prompt"] for kw in batch_kwargs],
+                             _TOY_VOCAB, cfg.text_tokens)
+        idx = jnp.asarray(np.asarray(per_req, np.int32))
+        emb = apply_ml(model_components["params"], ids, stack, idx)
+        return [{"prompt_embeds": emb[i:i + 1]} for i in range(len(batch_kwargs))]
 
     def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
         cfg = self.family.toy
@@ -158,6 +251,11 @@ class TextEncoder(Model):
             act_io_bytes=f.text_encoder_bytes(),      # memory-bound at b=1
             output_bytes=f.text_tokens * 4096 * 2.0,
             max_batch=32,
+            # grouped multi-LoRA pricing: one target (last layer's wo),
+            # two skinny matmuls per row, bf16 A/B factors per adapter
+            lora_rank=8,
+            lora_flops_per_rank=4.0 * f.text_tokens * 4096,
+            lora_bytes_per_adapter=4.0 * 4096 * 8,
         )
 
 
@@ -170,6 +268,7 @@ class DiffusionBackbone(Model):
     """
 
     scan_role = "backbone"
+    supports_multilora = True
 
     def __init__(self, family: DiffusionFamily, eager_controlnet: bool = False) -> None:
         self.family = family
@@ -203,8 +302,22 @@ class DiffusionBackbone(Model):
                     p, lat, t, emb, guidance, res)
             return mmdit_apply(p, cfg, lat, t, emb, res)
 
+        def _forward_ml(p, lat, t, emb, res, guidance, stack, idx):
+            # grouped multi-adapter forward: per-row LoRAs against the
+            # SHARED base params (no fold); CFG duplicates the adapter
+            # index vector alongside the latent rows
+            if uses_cfg:
+                idx2 = jnp.concatenate([idx, idx])
+                return fused_cfg_velocity(
+                    lambda pp, l, tt, e, r: mmdit_apply(
+                        pp, cfg, l, tt, e, r, lora_stack=stack, lora_idx=idx2),
+                    p, lat, t, emb, guidance, res)
+            return mmdit_apply(p, cfg, lat, t, emb, res,
+                               lora_stack=stack, lora_idx=idx)
+
         return {"params": params, "apply": apply,
-                "forward": jax.jit(_forward), "cfg": cfg}
+                "forward": jax.jit(_forward),
+                "forward_ml": jax.jit(_forward_ml), "cfg": cfg}
 
     def fold_patches(
         self,
@@ -287,6 +400,33 @@ class DiffusionBackbone(Model):
             return self._execute_sequential(model_components, batch_kwargs)
         lat, emb, t, res, guidance, sizes = stacked
         v = self._velocity(model_components, params, lat, t, emb, res, guidance)
+        return [{"velocity": chunk} for chunk in _split_rows(v, sizes)]
+
+    def execute_batch_multilora(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        adapters: Dict[str, Dict[str, Any]],
+    ) -> Optional[List[Dict[str, Any]]]:
+        """One stacked forward for a batch MIXING adapters: per-row grouped
+        LoRA against the shared base params (the unfolded serving mode) —
+        no per-tenant fold, no parameter mutation."""
+        groups = _multilora_groups(batch_kwargs, adapters)
+        forward_ml = model_components.get("forward_ml")
+        if groups is None or forward_ml is None:
+            return None
+        cfg: DiTConfig = model_components["cfg"]
+        stacked = self._stack_batch(cfg, batch_kwargs)
+        if stacked is None:
+            return None
+        order, per_req = groups
+        lat, emb, t, res, guidance, sizes = stacked
+        stack = _cached_lora_stack(model_components, order, adapters)
+        idx = jnp.asarray(np.repeat(np.asarray(per_req, np.int32), sizes))
+        g = jnp.asarray(np.broadcast_to(
+            np.asarray(guidance, np.float32), (lat.shape[0],)))
+        v = forward_ml(model_components["params"], lat, t, emb, res, g,
+                       stack, idx)
         return [{"velocity": chunk} for chunk in _split_rows(v, sizes)]
 
     def _stack_batch(
@@ -410,6 +550,13 @@ class DiffusionBackbone(Model):
             max_parallelism=4,
             max_batch=8,
             calls_per_request=f.denoise_steps,
+            # grouped multi-LoRA pricing (§5.1 extended): 4 img-stream
+            # targets × n_layers, two skinny matmuls per row per rank;
+            # per-adapter HBM traffic is the bf16 A/B factor stream
+            lora_rank=8,
+            lora_flops_per_rank=16.0 * f.n_layers_real * f.image_tokens
+            * f.d_model_real,
+            lora_bytes_per_adapter=16.0 * f.n_layers_real * f.d_model_real * 8,
         )
 
     def build_segment(self, controlnets: List["ControlNet"],
@@ -753,6 +900,7 @@ class DenoiseSegment(Model):
     """
 
     is_segment = True
+    supports_multilora = True
 
     def __init__(self, backbone: DiffusionBackbone,
                  controlnets: Sequence[ControlNet], n_steps: int) -> None:
@@ -791,6 +939,7 @@ class DenoiseSegment(Model):
             "cfg": self.family.toy,
         }
         comps["scan"] = self._make_scan()
+        comps["scan_ml"] = self._make_scan(multilora=True)
         return comps
 
     def fold_patches(
@@ -804,17 +953,33 @@ class DenoiseSegment(Model):
         return {**components, "backbone": folded}
 
     # ----------------------------------------------------------- the scan
-    def _make_scan(self) -> Any:
+    def _make_scan(self, multilora: bool = False) -> Any:
         """One jitted scan over the chunk.  The body is the UNFUSED
         per-step arithmetic verbatim (same residual fan-in order, same
         fused-CFG call, same Euler update) so fused output == unfused
-        output bit for bit; jit recompiles per distinct (S, B) shape."""
+        output bit for bit; jit recompiles per distinct (S, B) shape.
+
+        ``multilora=True`` builds the grouped multi-adapter variant: the
+        scan takes the stacked LoRA factors plus a per-row adapter index,
+        and every step applies each row's adapter against the shared base
+        params (no fold) — cross-tenant requests share one segment."""
         cfg = self.family.toy
         uses_cfg = self.family.uses_cfg
         n_cns = len(self.cns)
 
-        def run(pb, pcns, lat, emb, cond, t_mid, t_cur, t_next, guidance):
+        def run(pb, pcns, lat, emb, cond, t_mid, t_cur, t_next, guidance,
+                stack=None, idx=None):
             # lat [B,H,W,C]; emb [B,Tc,D]; t_* [S,B]; guidance [B]
+            idx2 = (jnp.concatenate([idx, idx])
+                    if multilora and uses_cfg else idx)
+
+            def bb_apply(p, l, tt, e, r):
+                if multilora:
+                    return mmdit_apply(p, cfg, l, tt, e, r,
+                                       lora_stack=stack,
+                                       lora_idx=idx2 if uses_cfg else idx)
+                return mmdit_apply(p, cfg, l, tt, e, r)
+
             def body(lat, xs):
                 t, tc, tn = xs
                 if n_cns:
@@ -828,10 +993,9 @@ class DenoiseSegment(Model):
                          cfg.d_model), lat.dtype)
                 if uses_cfg:
                     v = fused_cfg_velocity(
-                        lambda p, l, tt, e, r: mmdit_apply(p, cfg, l, tt, e, r),
-                        pb, lat, t, emb, guidance, res)
+                        bb_apply, pb, lat, t, emb, guidance, res)
                 else:
-                    v = mmdit_apply(pb, cfg, lat, t, emb, res)
+                    v = bb_apply(pb, lat, t, emb, res)
                 dt = (tn - tc).astype(lat.dtype)
                 dt = dt.reshape((lat.shape[0],) + (1,) * (lat.ndim - 1))
                 return lat + dt * v, None
@@ -932,6 +1096,31 @@ class DenoiseSegment(Model):
         out = model_components["scan"](
             params, tuple(c["params"] for c in model_components["cns"]),
             lat, emb, cond, t_mid, t_cur, t_next, guidance)
+        return [{"latents": chunk} for chunk in _split_rows(out, sizes)]
+
+    def execute_batch_multilora(
+        self,
+        model_components: Dict[str, Any],
+        batch_kwargs: List[Dict[str, Any]],
+        adapters: Dict[str, Dict[str, Any]],
+    ) -> Optional[List[Dict[str, Any]]]:
+        """The whole chunk as one grouped multi-adapter scan: cross-tenant
+        requests share the segment; each step applies per-row adapters."""
+        groups = _multilora_groups(batch_kwargs, adapters)
+        scan_ml = model_components.get("scan_ml")
+        if groups is None or scan_ml is None:
+            return None
+        stacked = self._stack_segment(batch_kwargs)
+        if stacked is None:
+            return None
+        order, per_req = groups
+        lat, emb, cond, t_mid, t_cur, t_next, guidance, sizes = stacked
+        stack = _cached_lora_stack(model_components, order, adapters)
+        idx = jnp.asarray(np.repeat(np.asarray(per_req, np.int32), sizes))
+        out = scan_ml(
+            model_components["backbone"]["params"],
+            tuple(c["params"] for c in model_components["cns"]),
+            lat, emb, cond, t_mid, t_cur, t_next, guidance, stack, idx)
         return [{"latents": chunk} for chunk in _split_rows(out, sizes)]
 
     def clamp_parallelism(self, batch_size: int, k: int) -> int:
@@ -1082,6 +1271,11 @@ class DenoiseSegment(Model):
             max_batch=b.max_batch,
             calls_per_request=1,
             steps_per_call=self.n_steps,
+            # per-row adapters apply inside every scan step — inherit the
+            # backbone's per-step multi-LoRA pricing terms
+            lora_rank=b.lora_rank,
+            lora_flops_per_rank=b.lora_flops_per_rank,
+            lora_bytes_per_adapter=b.lora_bytes_per_adapter,
         )
 
 
@@ -1101,7 +1295,15 @@ class LoRAAdapter(Model):
     def load(self, device: Any = None) -> Dict[str, Any]:
         key = jax.random.PRNGKey(stable_hash(self.model_id) % 2**31)
         lora = init_lora(key, self.family.toy, rank=self.rank)
-        return {"lora": randomize_lora(key, lora)}
+        return {
+            "lora": randomize_lora(key, lora),
+            # companion factors for a patched TextEncoder (grouped or
+            # folded into the last layer's wo); unused unless the adapter
+            # is attached to the text encoder as well
+            "text_lora": init_text_lora(
+                jax.random.fold_in(key, 1), self.family.toy.text_dim,
+                rank=self.rank),
+        }
 
     def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:
         return {"adapter_weights": model_components["lora"]}

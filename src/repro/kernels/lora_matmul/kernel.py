@@ -63,6 +63,52 @@ def _lora_kernel(
         o_ref[...] = y.astype(o_ref.dtype)
 
 
+def _lora_kernel_grouped(
+    x_ref, w_ref, a_ref, b_ref, mask_ref, o_ref,
+    acc_scratch, xa_scratch,
+):
+    """Grouped (multi-adapter) variant.
+
+    ``a``/``b`` hold the N adapters' factors concatenated along the rank
+    axis (``A_cat: [K, G*r]``, ``B_cat: [G*r, N]``) and ``mask`` is a
+    per-row selector ``[M, G*r]`` that is ``scale[g]`` over the rank block
+    of the row's adapter ``g`` and zero elsewhere — so
+
+        y[m] = x[m] @ W + ((x[m] @ A_cat) * mask[m]) @ B_cat
+             = x[m] @ W + scale[idx[m]] * (x[m] @ A[idx[m]]) @ B[idx[m]]
+
+    and a row with no adapter (all-zero mask) adds an exact float zero.
+    The tiling is identical to :func:`_lora_kernel`; the only extra
+    traffic is the ``[bm, G*r]`` mask tile.
+    """
+    ni = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    x = x_ref[...].astype(jnp.float32)                  # [bm, bk]
+    w = w_ref[...].astype(jnp.float32)                  # [bk, bn]
+    acc_scratch[...] += x @ w
+
+    @pl.when(ni == 0)
+    def _xa():
+        @pl.when(ki == 0)
+        def _xa_init():
+            xa_scratch[...] = jnp.zeros_like(xa_scratch)
+        a = a_ref[...].astype(jnp.float32)              # [bk, G*r]
+        xa_scratch[...] += x @ a
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        b = b_ref[...].astype(jnp.float32)              # [G*r, bn]
+        mask = mask_ref[...].astype(jnp.float32)        # [bm, G*r]
+        y = acc_scratch[...] + (xa_scratch[...] * mask) @ b
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
 def lora_matmul(
     x: jax.Array,               # [M, K]
     w: jax.Array,               # [K, N]
@@ -101,3 +147,43 @@ def lora_matmul(
         ],
         interpret=interpret,
     )(x, w, a, b)
+
+
+def lora_matmul_grouped(
+    x: jax.Array,               # [M, K]
+    w: jax.Array,               # [K, N]
+    a_cat: jax.Array,           # [K, G*r]  adapters concatenated on rank
+    b_cat: jax.Array,           # [G*r, N]
+    mask: jax.Array,            # [M, G*r]  per-row scaled adapter selector
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    gr = a_cat.shape[1]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n), pl.cdiv(k, block_k))
+
+    return pl.pallas_call(
+        _lora_kernel_grouped,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_k, gr), lambda mi, ni, ki: (ki, 0)),
+            pl.BlockSpec((gr, block_n), lambda mi, ni, ki: (0, ni)),
+            pl.BlockSpec((block_m, gr), lambda mi, ni, ki: (mi, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, gr), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a_cat, b_cat, mask)

@@ -7,12 +7,14 @@ on both the interpreter and Mosaic), runs the kernel, slices back.
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.lora_matmul.kernel import lora_matmul
-from repro.kernels.lora_matmul.ref import lora_matmul_ref
+from repro.kernels.lora_matmul.kernel import lora_matmul, lora_matmul_grouped
+from repro.kernels.lora_matmul.ref import lora_matmul_grouped_ref, lora_matmul_ref
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -27,6 +29,31 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 def _is_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# The serving hot path (grouped multi-LoRA forwards) routes through the
+# Pallas kernel on TPU and the jnp grouped oracle elsewhere; tests and the
+# env flag can force either route.  Read at TRACE time — jitted model
+# applies keep whichever route was active when first traced.
+_grouped_kernel: Optional[bool] = None
+_env = os.environ.get("REPRO_GROUPED_LORA_KERNEL")
+if _env is not None:
+    _grouped_kernel = _env.lower() not in ("0", "false", "off")
+
+
+def set_grouped_kernel(enabled: Optional[bool]) -> Optional[bool]:
+    """Force (True/False) or reset (None = auto: TPU only) the grouped
+    kernel route; returns the previous setting."""
+    global _grouped_kernel
+    prev = _grouped_kernel
+    _grouped_kernel = enabled
+    return prev
+
+
+def grouped_kernel_enabled() -> bool:
+    if _grouped_kernel is not None:
+        return _grouped_kernel
+    return _is_tpu()
 
 
 @functools.partial(
@@ -57,6 +84,67 @@ def lora_apply(
     bp = _pad_to(b, 1, bn)
     out = lora_matmul(
         x2, wp, ap, bp, scale=scale,
+        block_m=bm, block_n=bn, block_k=bk, interpret=not _is_tpu(),
+    )
+    return out[:m, :n].reshape(*lead, n)
+
+
+def lora_apply_grouped(
+    x: jax.Array,               # [..., K]
+    w: jax.Array,               # [K, N]
+    a: jax.Array,               # [G, K, r]  stacked adapter A factors
+    b: jax.Array,               # [G, r, N]  stacked adapter B factors
+    idx: jax.Array,             # [...] int32 adapter per row; -1 = none
+    scales: jax.Array,          # [G]
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """Batched multi-adapter projection for a batch mixing G tenants:
+    ``y = x @ W + scales[idx] * (x @ A[idx]) @ B[idx]`` with per-row
+    adapter indices (rows with ``idx < 0`` get the plain projection).
+
+    ``idx`` indexes the leading (row) dimensions of ``x`` — one entry per
+    row of ``x.reshape(-1, K)``."""
+    if use_kernel is None:
+        use_kernel = grouped_kernel_enabled()
+    return _lora_apply_grouped(x, w, a, b, idx, scales,
+                               block_m, block_n, block_k, bool(use_kernel))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_kernel")
+)
+def _lora_apply_grouped(x, w, a, b, idx, scales,
+                        block_m, block_n, block_k, use_kernel):
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[1]
+    g, _, r = a.shape
+    x2 = x.reshape(-1, k)
+    idx2 = idx.reshape(-1).astype(jnp.int32)
+    if not use_kernel:
+        out = lora_matmul_grouped_ref(x2, w, a, b, idx2, scales)
+        return out.reshape(*lead, n)
+    m = x2.shape[0]
+    # The grouped form is one wide rank-(G*r) LoRA with a per-row masked
+    # projection: A_cat = [A_0 | ... | A_{G-1}], B_cat stacked on rows, and
+    # mask[m] = scales[g] over adapter g's rank block, 0 elsewhere.
+    a_cat = a.transpose(1, 0, 2).reshape(k, g * r)
+    b_cat = b.reshape(g * r, n)
+    sel = jax.nn.one_hot(idx2, g, dtype=jnp.float32)      # -1 -> zero row
+    sel = sel * scales.astype(jnp.float32)[None, :]
+    mask = jnp.repeat(sel, r, axis=1)                     # [M, G*r]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    x2p = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    ap = _pad_to(a_cat, 0, bk)
+    bp = _pad_to(b_cat, 1, bn)
+    maskp = _pad_to(mask, 0, bm)
+    out = lora_matmul_grouped(
+        x2p, wp, ap, bp, maskp,
         block_m=bm, block_n=bn, block_k=bk, interpret=not _is_tpu(),
     )
     return out[:m, :n].reshape(*lead, n)

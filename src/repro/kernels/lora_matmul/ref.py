@@ -12,3 +12,24 @@ def lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
     y = xf @ w.astype(jnp.float32)
     y = y + scale * (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
     return y.astype(x.dtype)
+
+
+def lora_matmul_grouped_ref(
+    x: jax.Array,               # [M, K]
+    w: jax.Array,               # [K, N]
+    a: jax.Array,               # [G, K, r]  stacked adapter A factors
+    b: jax.Array,               # [G, r, N]  stacked adapter B factors
+    idx: jax.Array,             # [M] int32 adapter per row; -1 = no adapter
+    scales: jax.Array,          # [G] per-adapter scale
+) -> jax.Array:
+    """Per-row grouped multi-adapter oracle:
+    ``y[m] = x[m] @ W + scales[idx[m]] * (x[m] @ A[idx[m]]) @ B[idx[m]]``,
+    with rows whose ``idx`` is negative left as the plain ``x @ W``."""
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    safe = jnp.clip(idx, 0, a.shape[0] - 1)
+    s = jnp.where(idx < 0, 0.0, scales.astype(jnp.float32)[safe])
+    xa = jnp.einsum("mk,mkr->mr", xf, a[safe].astype(jnp.float32))
+    delta = jnp.einsum("mr,mrn->mn", xa, b[safe].astype(jnp.float32))
+    y = y + s[:, None] * delta
+    return y.astype(x.dtype)

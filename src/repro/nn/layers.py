@@ -64,6 +64,32 @@ def shard_map_compat(f, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
+# ----------------------------------------------------- grouped LoRA dense
+
+def grouped_lora_dense(
+    h: jax.Array,               # [B, S, d_in]
+    w: jax.Array,               # [d_in, d_out]
+    a: jax.Array,               # [G, d_in, r]  stacked adapter A factors
+    b: jax.Array,               # [G, r, d_out] stacked adapter B factors
+    idx: jax.Array,             # [B] int32 adapter per batch row; -1 = none
+    scales: jax.Array,          # [G]
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """Dense projection with a per-row grouped multi-LoRA delta:
+    ``h @ w + scales[idx] * (h @ a[idx]) @ b[idx]`` — one forward serves a
+    batch mixing G tenants.  Routes through the Pallas ``lora_matmul``
+    grouped kernel on TPU (``repro.kernels.lora_matmul.ops`` gate), the
+    jnp grouped oracle elsewhere; rows with ``idx < 0`` are bit-exactly
+    the plain projection on the jnp route."""
+    from repro.kernels.lora_matmul.ops import lora_apply_grouped
+
+    bsz, s, d_in = h.shape
+    rows_idx = jnp.repeat(idx.astype(jnp.int32), s)
+    out = lora_apply_grouped(h.reshape(bsz * s, d_in), w, a, b,
+                             rows_idx, scales, use_kernel=use_kernel)
+    return out.reshape(bsz, s, w.shape[1])
+
+
 # ---------------------------------------------------------------- init utils
 
 def dense_init(key: jax.Array, d_in: int, d_out: int, dtype: Any = jnp.float32,

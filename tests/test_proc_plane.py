@@ -27,6 +27,7 @@ import pytest
 
 from repro.core import (
     FaultPlane,
+    GraphCompiler,
     LocalBackend,
     ProcBackend,
     ProcConfig,
@@ -34,8 +35,10 @@ from repro.core import (
     ServingSystem,
     processes_available,
 )
+from repro.core.passes import InlineTrivialPass, JitCompilePass, SegmentFusionPass
 from repro.core.profiles import GPU_H800
-from repro.diffusion import make_basic_workflow, make_lora_workflow
+from repro.core.registry import WorkflowRegistry
+from repro.diffusion import FAMILIES, ModelSet, make_basic_workflow, make_lora_workflow
 from repro.sim import assert_invariants, check_invariants
 
 pytestmark = pytest.mark.skipif(
@@ -241,4 +244,67 @@ def test_supervisor_restart_rotates_pid_and_epoch():
         assert ex.n_revives >= 1
         # the dead worker's staging view was invalidated: keys re-shipped
         assert be.staging_ships > 0
+        assert_invariants(co)
+
+
+# --------------------------------------------------------------------------
+# multi-LoRA adapter shipping: warm refs, kill -> re-ship only the missing
+# --------------------------------------------------------------------------
+
+def _mixed_tenant_system():
+    """1-executor proc system serving two LoRA tenants + unpatched traffic
+    with the multilora scheduler; AsyncLoRAPass is stripped so adapter
+    resolution is deterministic (its fold-in depends on wall seconds)."""
+    be = ProcBackend(FAST)
+    sys_ = ServingSystem(n_executors=1, backend=be)
+    sys_.registry = WorkflowRegistry(GraphCompiler(
+        [InlineTrivialPass(), SegmentFusionPass(), JitCompilePass()]))
+    sys_.coordinator.scheduler = Scheduler(
+        sys_.profiles, use_declared_max_batch=True, multilora=True)
+    ms = ModelSet(FAMILIES["sd3"])
+    for wf in (make_basic_workflow("sd3", ms),
+               make_lora_workflow("sd3", "tenantA", ms),
+               make_lora_workflow("sd3", "tenantB", ms)):
+        sys_.register(wf)
+    return sys_, be
+
+
+def _mixed_wave(sys_):
+    reqs = [sys_.submit(name, inputs={"seed": 3, "prompt": "tenants"},
+                        arrival=sys_.coordinator.now, steps=3)
+            for name in ("sd3:lora:tenantA", "sd3:lora:tenantB", "sd3:basic")]
+    sys_.run()
+    assert all(r.status == "done" for r in reqs)
+    return reqs
+
+
+def test_proc_adapter_factors_reship_after_kill():
+    """Decoded A/B factors ride the staging protocol: shipped once, then
+    referenced by key; a killed worker's recovery invalidates its staging
+    view, so the next mixed batch re-ships EXACTLY the missing factor
+    sets — nothing more — and the grouped route stays correct."""
+    sys_, be = _mixed_tenant_system()
+    with sys_:
+        reqs1 = _mixed_wave(sys_)
+        assert any(b.multilora for b in sys_.coordinator.dispatch_log)
+        # two tenants -> two factor sets shipped as payload, no refs yet
+        assert be.adapter_ships == 2 and be.adapter_hits == 0
+
+        # warm second wave: the worker holds both factor sets staged, so
+        # the parent sends bare refs and ships nothing
+        _mixed_wave(sys_)
+        assert be.adapter_ships == 2 and be.adapter_hits >= 2
+
+        want = [_image(sys_, r) for r in reqs1]
+
+        victim = next(iter(be.workers))
+        be.kill_worker(victim)
+        reqs3 = _mixed_wave(sys_)
+        co = sys_.coordinator
+        assert co.n_worker_deaths >= 1
+        # recovery re-shipped only the two missing factor sets
+        assert be.adapter_ships == 4
+        # the re-shipped adapters produce the same images as before
+        for img, r_new in zip(want, reqs3):
+            np.testing.assert_array_equal(_image(sys_, r_new), img)
         assert_invariants(co)
