@@ -1,0 +1,204 @@
+"""Telemetry overhead study — the observability tax, measured.
+
+Three numbers, emitted to ``BENCH_telemetry.json``:
+
+* **batched-exec overhead**: waves of B=4 simultaneous basic-sd3
+  requests on one in-process executor, tracer off vs on, interleaved
+  round-robin so host timing noise hits both arms alike.  The gate the
+  repo documents is <=5% img/s overhead with tracing ON (the off path is
+  guarded to build nothing, so its overhead is unmeasurably small).
+* **disabled hot-path cost**: nanoseconds per guarded instrumentation
+  call on the ``REPRO_TELEMETRY=0`` path (the ``if tracer.enabled:``
+  pattern every runtime site uses, against the shared no-op tracer).
+* **proc-plane overhead**: one traced process-isolated run vs untraced.
+  Reported honestly, NOT gated: span context rides every exec RPC and
+  worker replies carry spans, so the proc tax is real wire bytes — but
+  it is paid only when tracing is on.
+
+CLI: ``python -m benchmarks.bench_telemetry [--smoke]`` (CI liveness
+check with tiny trial counts — not a measurement).
+"""
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core import (
+    LocalBackend,
+    ProcBackend,
+    ProcConfig,
+    Scheduler,
+    ServingSystem,
+    processes_available,
+)
+from repro.core.telemetry import MetricsRegistry
+from repro.core.tracing import NULL_TRACER, Tracer
+from repro.diffusion import FAMILIES, ModelSet, make_basic_workflow
+
+TELEMETRY_JSON = os.path.join(os.path.dirname(__file__), "..",
+                              "BENCH_telemetry.json")
+
+
+class _Arm:
+    """One executable-plane arm (tracer off or on), jit-warmed at build."""
+
+    def __init__(self, tracer, n_requests: int = 4, steps: int = 3):
+        self.n_requests = n_requests
+        self.steps = steps
+        self.tracer = tracer
+        self.backend = LocalBackend()
+        self.sys = ServingSystem(n_executors=1, backend=self.backend,
+                                 tracer=tracer, metrics=MetricsRegistry())
+        self.sys.coordinator.scheduler = Scheduler(
+            self.sys.profiles, max_batch_cap=n_requests,
+            use_declared_max_batch=True)
+        self.wf = make_basic_workflow("sd3", ModelSet(FAMILIES["sd3"]))
+        self.sys.register(self.wf)
+        self._trial = 0
+        self._wave("warm wave")              # compile every jit variant
+        self.waves: list = []
+
+    def _wave(self, prompt: str) -> float:
+        import jax
+
+        coord = self.sys.coordinator
+        base = coord.now
+        self._trial += 1
+        t0 = time.perf_counter()
+        reqs = [
+            self.sys.submit(
+                self.wf.name,
+                inputs={"seed": 100 * self._trial + i, "prompt": prompt},
+                arrival=base, steps=self.steps)
+            for i in range(self.n_requests)
+        ]
+        self.sys.run()
+        for r in reqs:
+            img = coord.engine.value_of(r.ref_key(r.graph.outputs["image"]))
+            jax.block_until_ready(img)
+        return time.perf_counter() - t0
+
+    def run_trial(self) -> None:
+        self.waves.append(self._wave("measured wave"))
+
+    @property
+    def wave_seconds(self) -> float:
+        ordered = sorted(self.waves)
+        n = len(ordered)
+        mid = n // 2
+        return ordered[mid] if n % 2 else 0.5 * (ordered[mid - 1] + ordered[mid])
+
+
+def batched_overhead_study(trials: int = 16) -> dict:
+    """Interleaved off/on waves; median img/s per arm."""
+    off = _Arm(NULL_TRACER)
+    on = _Arm(Tracer())
+    for _ in range(trials):
+        off.run_trial()
+        on.run_trial()
+    ips_off = off.n_requests / off.wave_seconds
+    ips_on = on.n_requests / on.wave_seconds
+    overhead_pct = 100.0 * (1.0 - ips_on / ips_off)
+    emit("s8_telemetry_batched_off", off.wave_seconds * 1e6,
+         f"{ips_off:.2f} img/s (B={off.n_requests}, {trials} waves)")
+    emit("s8_telemetry_batched_on", on.wave_seconds * 1e6,
+         f"{ips_on:.2f} img/s; overhead={overhead_pct:+.2f}% (gate <=5%); "
+         f"{len(on.tracer.events)} events recorded")
+    return {
+        "B": off.n_requests,
+        "waves": trials,
+        "images_per_s_off": ips_off,
+        "images_per_s_on": ips_on,
+        "overhead_pct": overhead_pct,
+        "trace_events": len(on.tracer.events),
+    }
+
+
+def disabled_hot_path_study(n: int = 2_000_000) -> float:
+    """ns per guarded call on the disabled path: the exact pattern every
+    instrumentation site uses (attribute test, no argument building)."""
+    tr = NULL_TRACER
+    t0 = time.perf_counter()
+    hits = 0
+    for i in range(n):
+        if tr.enabled:              # pragma: no cover - never taken
+            tr.instant("x", float(i), 0, "t")
+            hits += 1
+    ns = (time.perf_counter() - t0) / n * 1e9
+    assert hits == 0
+    emit("s8_telemetry_disabled_call", ns / 1e3,
+         f"{ns:.1f} ns per guarded call ({n} calls, no-op tracer)")
+    return ns
+
+
+def _proc_run(tracer, steps: int = 5) -> tuple:
+    cfg = ProcConfig(hb_interval=0.02, hb_timeout=2.0, spawn_timeout=120.0)
+    sys_ = ServingSystem(n_executors=2, backend=ProcBackend(cfg),
+                         tracer=tracer, metrics=MetricsRegistry())
+    sys_.coordinator.scheduler = Scheduler(
+        sys_.profiles, use_declared_max_batch=True, segment_chunk=2)
+    wf = make_basic_workflow("sd3")
+    sys_.register(wf)
+    with sys_:
+        t0 = time.perf_counter()
+        req = sys_.submit(wf.name, inputs={"seed": 0, "prompt": "a fox"},
+                          arrival=0.0, steps=steps)
+        sys_.run()
+        wall = time.perf_counter() - t0
+    assert req.status == "done"
+    return wall, len(tracer.events)
+
+
+def proc_overhead_study(steps: int = 5) -> dict:
+    """Traced vs untraced proc-plane run.  Documented, not gated: most of
+    the wall is worker spawn + real RPC, so run-to-run spawn noise easily
+    exceeds the span tax — the honest number here is the event count and
+    the single-run delta, not a tight bound."""
+    if not processes_available():
+        emit("s8_telemetry_proc", 0.0, "SKIPPED: cannot spawn processes")
+        return {"skipped": True}
+    wall_off, _ = _proc_run(NULL_TRACER, steps)
+    tr = Tracer()
+    wall_on, n_events = _proc_run(tr, steps)
+    overhead_pct = 100.0 * (wall_on - wall_off) / wall_off
+    emit("s8_telemetry_proc", wall_on * 1e6,
+         f"traced={wall_on:.2f}s vs untraced={wall_off:.2f}s "
+         f"({overhead_pct:+.1f}%, spawn-noise dominated); "
+         f"{n_events} events incl. worker spans")
+    return {
+        "wall_off_s": wall_off,
+        "wall_on_s": wall_on,
+        "overhead_pct": overhead_pct,
+        "trace_events": n_events,
+        "note": "single-run delta; worker spawn noise dominates the span "
+                "tax, see batched_exec for the gated overhead number",
+    }
+
+
+def run(smoke: bool = False) -> None:
+    out = {
+        "smoke": smoke,
+        "batched_exec": batched_overhead_study(trials=4 if smoke else 16),
+        "disabled_hot_path_ns": disabled_hot_path_study(
+            n=200_000 if smoke else 2_000_000),
+        "proc": proc_overhead_study(steps=3 if smoke else 5),
+    }
+    with open(TELEMETRY_JSON, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trial counts — CI liveness check, not a "
+                         "measurement")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ from benchmarks import (
     bench_sharing,
     bench_slo_scale,
     bench_slo_vs_rate,
+    bench_telemetry,
     bench_testbed,
     roofline,
 )
@@ -50,6 +51,7 @@ ALL = [
     ("s75_overhead", bench_overhead),
     ("s6_chaos", bench_chaos),
     ("s7_proc_chaos", bench_proc_chaos),
+    ("s8_telemetry", bench_telemetry),
     ("roofline", roofline),
 ]
 
@@ -68,6 +70,8 @@ def main() -> None:
         try:
             if args.quick and name == "fig9_rate":
                 mod.run(settings=("s1", "s6"), rates=(1.0, 2.0))
+            elif args.quick and name == "s8_telemetry":
+                mod.run(smoke=True)
             else:
                 mod.run()
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)

@@ -37,6 +37,16 @@ from repro.core.registry import ServingSystem, WorkflowRegistry
 from repro.core.runtime import Coordinator, Request, RequestNode
 from repro.core.scheduler import ScheduledBatch, Scheduler
 from repro.core.supervisor import ProcBackend, ProcConfig, Supervisor, processes_available
+from repro.core.telemetry import (
+    FoldCacheEviction,
+    MetricsRegistry,
+    TelemetryEvent,
+    configure as configure_telemetry,
+    default_registry,
+    telemetry_enabled,
+    validate_chrome_trace,
+)
+from repro.core.tracing import COORDINATOR_PID, NULL_TRACER, NullTracer, Tracer, make_tracer
 from repro.core.transport import (
     ChecksumError,
     FrameChannel,

@@ -23,6 +23,7 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.model import Model
 from repro.core.profiles import ProfileStore
+from repro.core.telemetry import FoldCacheEviction, default_registry
 
 # Lifecycle states (autoscaler-managed; a fixed fleet stays SERVING forever):
 #
@@ -358,6 +359,10 @@ class LocalBackend:
       grouped multi-LoRA route (mixed-adapter batches never fold).
     """
 
+    # proc plane span context (set by the coordinator around an exec RPC
+    # when tracing is on; see repro.core.supervisor.ProcBackend)
+    trace_ctx: Optional[Dict[str, Any]] = None
+
     def __init__(self, folded_budget_bytes: Optional[float] = None,
                  adapter_pool_bytes: Optional[float] = None) -> None:
         self._components: Dict[str, Dict[str, Any]] = {}
@@ -436,6 +441,12 @@ class LocalBackend:
             victim, _ = self._folded.popitem(last=False)
             self._folded_bytes.pop(victim, None)
             self.folded_evictions += 1
+            # typed event on the telemetry registry is the primary
+            # eviction signal; the stringly forward_log marker stays as
+            # a compat shim for pre-telemetry consumers
+            default_registry().emit(FoldCacheEviction(
+                model_id=victim[0], patch_ids=victim[1],
+                resident_bytes=sum(self._folded_bytes.values())))
             self.forward_log.append((f"evict:{victim[0]}", 0))
         return folded, load_dt
 

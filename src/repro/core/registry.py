@@ -63,6 +63,8 @@ class ServingSystem:
         faults: Optional[FaultPlane] = None,
         retry_policy: Optional[RetryPolicy] = None,
         replicate_segments: bool = False,
+        tracer: Any = None,
+        metrics: Any = None,
     ) -> None:
         """``autoscaler`` enables per-model elastic scaling: pass ``True``
         for the default policy, an :class:`AutoscalerConfig`, or a built
@@ -80,7 +82,13 @@ class ServingSystem:
         ``backend="proc"`` builds the process-isolated executor plane
         (each executor a separate OS process behind the frame transport;
         see :mod:`repro.core.supervisor`) — remember to :meth:`close`
-        the system, or use it as a context manager."""
+        the system, or use it as a context manager.
+
+        Telemetry: ``tracer`` forces a specific span tracer (default:
+        ``REPRO_TELEMETRY`` decides between a recording
+        :class:`~repro.core.tracing.Tracer` and the shared no-op);
+        ``metrics`` overrides the process-wide default
+        :class:`~repro.core.telemetry.MetricsRegistry`."""
         if backend == "proc":
             from repro.core.supervisor import ProcBackend
 
@@ -121,6 +129,8 @@ class ServingSystem:
             faults=faults,
             retry_policy=retry_policy,
             replicate_segments=replicate_segments,
+            tracer=tracer,
+            metrics=metrics,
         )
 
     # ---------------------------------------------------------------- API
@@ -161,6 +171,23 @@ class ServingSystem:
     @property
     def autoscaler(self) -> Optional[Autoscaler]:
         return self.coordinator.autoscaler
+
+    @property
+    def tracer(self) -> Any:
+        return self.coordinator.tracer
+
+    @property
+    def metrics(self) -> Any:
+        return self.coordinator.metrics
+
+    def export_trace(self, path: str, fmt: str = "chrome") -> None:
+        """Write the recorded timeline (``chrome`` | ``jsonl``); raises
+        if telemetry was disabled for this system."""
+        self.coordinator.export_trace(path, fmt)
+
+    def metrics_text(self) -> str:
+        """Prometheus text-format dump of the metrics registry."""
+        return self.coordinator.metrics_text()
 
     def slo_attainment(self, include_rejected: bool = True) -> float:
         return self.coordinator.slo_attainment(include_rejected)

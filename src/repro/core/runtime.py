@@ -54,6 +54,8 @@ from repro.core.faults import (
 )
 from repro.core.profiles import ProfileStore, node_infer_time
 from repro.core.scheduler import ScheduledBatch, Scheduler
+from repro.core.telemetry import MetricsRegistry, default_registry
+from repro.core.tracing import COORDINATOR_PID, make_tracer
 from repro.core.transport import StagedInput, WorkerDied
 from repro.core.types import ValueRef, nbytes_of
 
@@ -239,6 +241,8 @@ class Coordinator:
         faults: Optional[FaultPlane] = None,
         retry_policy: Optional[RetryPolicy] = None,
         replicate_segments: bool = False,
+        tracer: Optional[Any] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ) -> None:
         self.executors = executors
         self.by_id = {e.id: e for e in executors}
@@ -294,8 +298,104 @@ class Coordinator:
         self._proc = bool(getattr(backend, "is_proc_plane", False))
         self.n_worker_deaths = 0          # WorkerDied handled (all reasons)
         self.n_heartbeat_deaths = 0       # ... of which: lease expiry
+        # ------------------------------------------------- telemetry plane
+        # The tracer is the REPRO_TELEMETRY-gated no-op singleton unless
+        # tracing is on: every instrumentation site below guards on
+        # ``self._tele`` so the disabled path builds no span arguments.
+        # The metrics registry is always live — existing attribute
+        # counters re-register as scrape-time providers at zero hot-path
+        # cost (their ``self.n_x += 1`` call sites are untouched).
+        self.tracer = tracer if tracer is not None else make_tracer()
+        self._tele: bool = self.tracer.enabled
+        self.metrics = metrics if metrics is not None else default_registry()
+        # executor id -> open dispatch-span record, closed at the first
+        # of batch_done / batch_timeout / executor failure so slices on
+        # one executor track never partially overlap
+        self._open_batch: Dict[int, Dict[str, Any]] = {}
+        self._h_queue_delay = self.metrics.histogram(
+            "coordinator_queue_delay_seconds",
+            "ready -> dispatch delay per node", labelnames=("model",))
+        self._register_telemetry()
         if hasattr(backend, "attach_coordinator"):
             backend.attach_coordinator(self)
+
+    def _register_telemetry(self) -> None:
+        """Re-register the runtime's ad-hoc counters onto the metrics
+        registry as weakref providers (attribute APIs untouched)."""
+        reg = self.metrics
+        reg.register_object("coordinator", self, (
+            "n_submitted", "n_timeouts", "n_transient_retries",
+            "n_requeues", "n_stranded", "n_worker_deaths",
+            "n_heartbeat_deaths", "control_plane_time"))
+        reg.register_object("datastore", self.engine, (
+            "bytes_transferred", "num_transfers", "num_local_hits",
+            "fetch_retries", "failed_fetches", "duplicate_puts",
+            "ser_seconds", "serialized_bytes", "n_encodes", "n_decodes",
+            "stage_evictions"))
+        reg.register_object("scheduler", self.scheduler,
+                            ("n_cycles", "n_batches"))
+        for ex in self.executors:
+            reg.register_object("executor", ex, (
+                "n_failures", "n_quarantines", "n_revives",
+                "models_loaded_count", "bytes_loaded", "busy_time"),
+                labels={"executor": str(ex.id)})
+        if self.backend is not None:
+            reg.register_object("backend", self.backend, (
+                "exec_seconds", "folded_evictions", "multilora_forwards",
+                "n_injected_errors",
+                # proc plane (missing attributes are skipped at scrape)
+                "n_execs", "n_exec_replies", "n_exec_applied", "n_fenced",
+                "ser_seconds", "transport_seconds", "worker_seconds",
+                "restart_seconds", "staging_hits", "staging_ships",
+                "bytes_shipped", "adapter_ships", "adapter_hits",
+                "bytes_tx", "bytes_rx", "n_dup_frames",
+                "n_delayed_frames", "crc_errors"))
+            reg.register_object("adapter_pool", self.backend.adapter_pool,
+                                ("hits", "misses", "evictions"))
+        if self.autoscaler is not None:
+            reg.register_object("autoscaler", self.autoscaler, (
+                "n_quarantine_signals", "n_worker_death_signals"))
+        if self.faults is not None:
+            reg.register_object("faults", self.faults,
+                                ("n_crashes", "n_kills"))
+
+    # ------------------------------------------------------ telemetry API
+    def export_trace(self, path: str, fmt: str = "chrome") -> None:
+        """Write the recorded trace (``chrome`` for Perfetto, ``jsonl``
+        for the raw span schema).  Raises if telemetry was disabled."""
+        if fmt == "chrome":
+            self.tracer.export_chrome(path)
+        elif fmt == "jsonl":
+            self.tracer.export_jsonl(path)
+        else:
+            raise ValueError(f"unknown trace format {fmt!r}")
+
+    def metrics_text(self) -> str:
+        """Prometheus text dump of the unified metrics registry."""
+        return self.metrics.to_prometheus()
+
+    def _close_batch_span(self, record: Dict[str, Any], status: str) -> None:
+        """Close an open dispatch span at ``self.now`` (first of
+        batch_done / batch_timeout / executor failure wins)."""
+        t0 = record.pop("t0", None)
+        if t0 is None:
+            return
+        batch: ScheduledBatch = record["batch"]
+        eid = batch.executor_ids[0]
+        if self._open_batch.get(eid) is record:
+            self._open_batch.pop(eid, None)
+        rids = record.get("trace_rids") or []
+        self.tracer.span(
+            f"dispatch {batch.model_id}", t0, self.now - t0,
+            COORDINATOR_PID, f"exec{eid}", cat="dispatch",
+            trace=rids[0] if rids else None,
+            args={"model": batch.model_id, "batch_size": batch.batch_size,
+                  "parallelism": batch.parallelism,
+                  "segment_steps": batch.segment_steps,
+                  "executors": list(batch.executor_ids),
+                  "rids": list(rids), "status": status})
+        for rid in rids:
+            self.tracer.flow(rid, t0, COORDINATOR_PID, f"exec{eid}")
 
     # ----------------------------------------------------------- frontend
     def submit(
@@ -360,10 +460,23 @@ class Coordinator:
     # -------------------------------------------------------------- events
     def _on_arrival(self, req: Request) -> None:
         backlog = sum(r.remaining_work for r in self.inflight.values())
+        if self._tele:
+            self.tracer.begin_request(
+                req.rid, f"r{req.rid} {req.workflow_name}", self.now,
+                args={"workflow": req.workflow_name,
+                      "slo_seconds": req.slo_seconds})
         if not self.admission.decide(self.now, req.graph, req.slo_seconds,
                                      backlog, self.n_schedulable):
             req.status = "rejected"
             self.rejected.append(req)
+            if self._tele:
+                self.tracer.instant(
+                    "rejected", self.now, COORDINATOR_PID, "control",
+                    cat="admission", trace=req.rid,
+                    args={"backlog": backlog})
+                self.tracer.end_request(
+                    req.rid, f"r{req.rid} {req.workflow_name}", self.now,
+                    status="rejected")
             if self.autoscaler is not None:
                 # shed demand is still demand: attribute it to the models
                 # the request would have run so the fleet can grow
@@ -394,6 +507,8 @@ class Coordinator:
         if record.get("done"):
             return  # the paired timeout already reclaimed this batch
         record["done"] = True
+        if self._tele:
+            self._close_batch_span(record, "done")
         batch: ScheduledBatch = record["batch"]
         seqs = record.get("seqs")
         for rnode in batch.nodes:
@@ -481,12 +596,26 @@ class Coordinator:
         self.n_worker_deaths += 1
         if err.reason == "heartbeat":
             self.n_heartbeat_deaths += 1
+        if self._tele:
+            self.tracer.instant(
+                "worker_death", self.now, COORDINATOR_PID, "control",
+                cat="fault", args={"executor": err.executor_id,
+                                   "reason": err.reason,
+                                   "pid": ex.worker_pid})
         self._fail_executor_now(err.executor_id, kill_process=False)
 
     def _fail_executor_now(self, executor_id: int, kill_process: bool) -> None:
         ex = self.by_id[executor_id]
         if not ex.alive:
             return  # double fail event (e.g. crash_at + crash_every collide)
+        if self._tele:
+            open_rec = self._open_batch.get(executor_id)
+            if open_rec is not None:
+                self._close_batch_span(open_rec, "executor_fail")
+            self.tracer.instant(
+                "executor_fail", self.now, COORDINATOR_PID, "control",
+                cat="fault", args={"executor": executor_id,
+                                   "killed": kill_process})
         resident = list(ex.loaded)
         ex.fail()
         if self._proc and kill_process:
@@ -546,6 +675,10 @@ class Coordinator:
         if ex.alive:
             return
         ex.revive(self.now)
+        if self._tele:
+            self.tracer.instant(
+                "revive", self.now, COORDINATOR_PID, "control",
+                cat="recovery", args={"executor": executor_id})
         self._log_fleet()
         self._maybe_quarantine(ex)
 
@@ -578,6 +711,11 @@ class Coordinator:
         if rnode.state in (READY, RUNNING, AWAITING):
             return
         req = rnode.request
+        if self._tele:
+            self.tracer.instant(
+                "replay", self.now, COORDINATOR_PID, "control",
+                cat="recovery", trace=req.rid,
+                args={"uid": rnode.uid, "seg_done": rnode.seg_done})
         missing_parent = False
         for ref in rnode.node.eager_input_refs():
             key = req.ref_key(ref)
@@ -632,6 +770,11 @@ class Coordinator:
             if count_retry:
                 rn.retries += 1
                 self.n_requeues += 1
+                if self._tele:
+                    self.tracer.instant(
+                        "requeue", self.now, COORDINATOR_PID, "control",
+                        cat="retry", trace=req.rid,
+                        args={"uid": rn.uid, "retries": rn.retries})
                 if rn.retries > self.retry.node_retry_budget:
                     self._shed_request(req)
                     continue
@@ -669,6 +812,8 @@ class Coordinator:
             return
         record["done"] = True
         self.n_timeouts += 1
+        if self._tele:
+            self._close_batch_span(record, "timeout")
         batch: ScheduledBatch = record["batch"]
         for eid in batch.executor_ids:
             ex = self.by_id.get(eid)
@@ -697,6 +842,10 @@ class Coordinator:
             return
         models = list(ex.loaded)
         ex.begin_quarantine()
+        if self._tele:
+            self.tracer.instant(
+                "quarantine", self.now, COORDINATOR_PID, "control",
+                cat="fault", args={"executor": ex.id, "models": models})
         if self.autoscaler is not None:
             # drained capacity is a demand signal: the fleet may need to
             # re-provision these models elsewhere while the cooldown runs
@@ -721,6 +870,13 @@ class Coordinator:
         req.status = "shed"
         self.inflight.pop(req.rid, None)
         self.shed.append(req)
+        if self._tele:
+            self.tracer.instant(
+                "shed", self.now, COORDINATOR_PID, "control",
+                cat="retry", trace=req.rid, args={})
+            self.tracer.end_request(
+                req.rid, f"r{req.rid} {req.workflow_name}", self.now,
+                status="shed")
         for rn in req.nodes.values():
             if rn.state != DONE:
                 rn.state = SHED
@@ -987,6 +1143,18 @@ class Coordinator:
         for eid in batch.executor_ids:
             self.by_id[eid].occupy(self.now, duration)
         record: Dict[str, Any] = {"batch": batch, "seqs": {}, "done": False}
+        if self._tele:
+            # open the dispatch span now; it closes (and records) at the
+            # first of batch_done / batch_timeout / executor failure, so
+            # slices on one executor track always nest
+            record["t0"] = self.now
+            record["trace_rids"] = sorted(
+                {rn.request.rid for rn in batch.nodes})
+            self._open_batch[batch.executor_ids[0]] = record
+            h = self._h_queue_delay.labels(batch.model_id)
+            for rn in batch.nodes:
+                if rn.ready_since is not None:
+                    h.observe(self.now - rn.ready_since)
         for rn in batch.nodes:
             rn.state = RUNNING
             rn.executor_ids = list(batch.executor_ids)
@@ -1063,6 +1231,7 @@ class Coordinator:
             groups.setdefault(type(rn.node.op), []).append(rn)
         proc = self._proc
         multilora = batch.multilora
+        trace_proc = proc and self._tele
         for rns in groups.values():
             lead = rns[0]
             op = lead.node.op
@@ -1131,9 +1300,23 @@ class Coordinator:
                 outs, load_dt, exec_dt = self.backend.execute_batch(
                     op, batch_kwargs, patches=patches, mesh=submesh)
             elif proc:
-                outs, load_dt, exec_dt = self.backend.execute_batch(
-                    op, batch_kwargs, patches=patches,
-                    executor_id=batch.executor_ids[0], out_keys=out_keys)
+                if trace_proc:
+                    # span context rides the exec RPC: the worker records
+                    # stage/forward spans relative to RPC receipt and the
+                    # backend rebases them onto this virtual timestamp.
+                    # Offset by the groups already executed this dispatch
+                    # (their virtual window is exactly their RPC wall) so
+                    # successive groups' spans never overlap on the track
+                    self.backend.trace_ctx = {
+                        "ts": self.now + total,
+                        "rids": sorted({rn.request.rid for rn in rns})}
+                try:
+                    outs, load_dt, exec_dt = self.backend.execute_batch(
+                        op, batch_kwargs, patches=patches,
+                        executor_id=batch.executor_ids[0], out_keys=out_keys)
+                finally:
+                    if trace_proc:
+                        self.backend.trace_ctx = None
             else:
                 outs, load_dt, exec_dt = self.backend.execute_batch(
                     op, batch_kwargs, patches=patches)
@@ -1279,6 +1462,19 @@ class Coordinator:
         req.status = "done"
         self.inflight.pop(req.rid, None)
         self.finished.append(req)
+        if self._tele:
+            # zero-duration marker slice on the requests track anchors
+            # the flow finish (flow arrows bind to slices, not async
+            # events), then the async request span closes
+            self.tracer.span(
+                f"complete r{req.rid}", t, 0.0, COORDINATOR_PID,
+                "requests", cat="request", trace=req.rid,
+                args={"latency": req.latency})
+            self.tracer.flow(req.rid, t, COORDINATOR_PID, "requests",
+                             end=True)
+            self.tracer.end_request(
+                req.rid, f"r{req.rid} {req.workflow_name}", t,
+                status="done")
         # GC everything this request still holds (inputs + non-output temps
         # + replicated segment commits)
         leftovers = [f"r{req.rid}:in:{name}" for name in req.graph.input_ports]
@@ -1302,10 +1498,12 @@ class Coordinator:
         return sum(lats) / len(lats) if lats else 0.0
 
     def p99_latency(self) -> float:
+        from repro.sim.metrics import quantile
+
         lats = sorted(r.latency for r in self.finished if r.latency is not None)
         if not lats:
             return 0.0
-        return lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+        return quantile(lats, 0.99)
 
     def total_busy_time(self) -> float:
         return sum(e.busy_time for e in self.executors)

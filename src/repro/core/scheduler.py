@@ -94,6 +94,10 @@ class Scheduler:
         # False restores strict per-patch-set batching (the fold-cache
         # arm of the multitenant benchmark)
         self.multilora = multilora
+        # telemetry providers (scrape-time; see repro.core.telemetry):
+        # scheduling cycles that found work, and batches formed
+        self.n_cycles = 0
+        self.n_batches = 0
 
     # ----------------------------------------------------------- ordering
     @staticmethod
@@ -290,6 +294,7 @@ class Scheduler:
         """One full scheduling cycle: greedily drain ready nodes onto free
         executors.  ``ready`` is mutated (dispatched nodes removed)."""
         decisions: List[ScheduledBatch] = []
+        self.n_cycles += 1
         # only SERVING executors take work: warming/draining/reserve fleet
         # members are invisible to placement (caller pre-filters by freeness)
         avail = [e for e in executors if e.is_serving]
@@ -327,6 +332,7 @@ class Scheduler:
                 # and cannot assemble a k-wide submesh
                 break
             ml = any(rn.batch_key != head.batch_key for rn in batch)
+            self.n_batches += 1
             targets, l_data, l_load, l_infer, swap = self.score_executors(
                 batch, avail, k, data_fetch_cost, steps=chunk, multilora=ml
             )

@@ -212,10 +212,18 @@ def _worker_main(host: str, port: int, worker_id: int, hb_interval: float,
                 continue
             if backend is None:
                 backend = LocalBackend()
+            # span recording is driven by the exec message's trace flag
+            # (parent-side REPRO_TELEMETRY decision), with timestamps
+            # relative to RPC receipt — the parent rebases them onto the
+            # virtual dispatch time when the reply lands
+            trace = bool(msg.get("trace"))
+            t_rpc = _time.perf_counter() if trace else 0.0
+            spans: List[Dict[str, Any]] = []
             try:
                 op = msg["op"]
                 patches = list(msg.get("patches") or ())
                 entries = msg["batch"]
+                t_stage0 = _time.perf_counter() if trace else 0.0
                 # stage shipped payloads, then ask for anything referenced
                 # but locally evicted (LRU) or lost to a restart
                 need = set()
@@ -254,6 +262,12 @@ def _worker_main(host: str, port: int, worker_id: int, hb_interval: float,
                     for pid, spec in adapters.items():
                         if spec[0] == "ref" and pid not in backend.adapter_pool:
                             backend.adapter_pool.seed(pid, staging[spec[1]])
+                if trace:
+                    spans.append({
+                        "name": "stage", "cat": "stage",
+                        "t0": t_stage0 - t_rpc,
+                        "dur": _time.perf_counter() - t_stage0,
+                        "args": {"needed": len(need)}})
                 kws: List[Dict[str, Any]] = []
                 for entry in entries:
                     kw: Dict[str, Any] = {}
@@ -264,18 +278,30 @@ def _worker_main(host: str, port: int, worker_id: int, hb_interval: float,
                             kw[name] = staging[spec[1]]
                     kws.append(kw)
                 n0 = len(backend.forward_log)
+                t_fwd0 = _time.perf_counter() if trace else 0.0
                 outs, load_dt, exec_dt = backend.execute_batch(
                     op, kws, patches=patches)
+                if trace:
+                    spans.append({
+                        "name": f"forward {getattr(op, 'model_id', '?')}",
+                        "cat": "forward", "t0": t_fwd0 - t_rpc,
+                        "dur": _time.perf_counter() - t_fwd0,
+                        "args": {"batch": len(entries), "load_dt": load_dt,
+                                 "exec_dt": exec_dt}})
                 for okeys, out in zip(msg.get("out_keys") or (), outs):
                     if isinstance(out, dict):
                         for port, key in okeys.items():
                             if port in out:
                                 _stage_put(staging, key, out[port],
                                            staging_cap)
-                send({"kind": "exec_done", "req": msg["req"],
-                      "epoch": msg["epoch"], "worker": worker_id,
-                      "outs": outs, "load_dt": load_dt, "exec_dt": exec_dt,
-                      "forwards": backend.forward_log[n0:]})
+                reply = {"kind": "exec_done", "req": msg["req"],
+                         "epoch": msg["epoch"], "worker": worker_id,
+                         "outs": outs, "load_dt": load_dt,
+                         "exec_dt": exec_dt,
+                         "forwards": backend.forward_log[n0:]}
+                if trace:
+                    reply["spans"] = spans
+                send(reply)
             except Exception as exc:   # surfaced parent-side, not fatal here
                 send({"kind": "exec_err", "req": msg["req"],
                       "epoch": msg["epoch"], "worker": worker_id,
@@ -446,6 +472,10 @@ class ProcBackend(LocalBackend):
         # staging protocol under synthetic ``adapter:<model_id>`` keys)
         self.adapter_ships = 0      # adapter factor sets shipped as payload
         self.adapter_hits = 0       # ... sent as a bare staged ref
+        # telemetry: span context of recent exec RPCs, kept (bounded) so
+        # a FENCED zombie reply's worker spans can still be attributed to
+        # the request trace that issued the RPC
+        self._rpc_meta: "OrderedDict[int, Dict[str, Any]]" = OrderedDict()
 
     # ------------------------------------------------------------- wiring
     def attach_coordinator(self, co: Any) -> None:
@@ -475,6 +505,12 @@ class ProcBackend(LocalBackend):
             if ex is not None:
                 ex.worker_pid = h.pid
                 ex.epoch = h.epoch
+            tr = self.co.tracer
+            if tr.enabled and h.channel is not None:
+                if h.channel.hb_trace is None:
+                    h.channel.hb_trace = []
+                tr.set_process_name(
+                    h.pid, f"worker-{executor_id} (pid {h.pid})")
 
     def kill_worker(self, executor_id: int) -> None:
         self.supervisor.kill(executor_id)
@@ -529,6 +565,14 @@ class ProcBackend(LocalBackend):
                 if m.get("kind") in ("exec_done", "exec_err"):
                     self.n_exec_replies += 1
                     self.n_fenced += 1
+                    self._note_fenced_reply(m)
+            if h.channel.hb_trace:
+                tr = self.co.tracer
+                if tr.enabled and h.pid is not None:
+                    for t in h.channel.hb_trace:
+                        tr.instant("hb", self.co.now, h.pid, "hb",
+                                   cat="hb", args={"wall": round(t, 6)})
+                del h.channel.hb_trace[:]
             now = _time.monotonic()
             if h.channel.eof or h.proc is None or not h.proc.is_alive():
                 dead.append(WorkerDied(eid, "exit"))
@@ -610,6 +654,19 @@ class ProcBackend(LocalBackend):
                "batch": entries, "out_keys": okeys}
         if adapter_specs:
             msg["adapters"] = adapter_specs
+        ctx = self.trace_ctx
+        if ctx is not None:
+            # propagate span context across the frame transport: the
+            # worker records stage/forward spans relative to RPC receipt;
+            # we keep the dispatch's virtual timestamp so replies — live
+            # OR fenced-late — rebase onto the request's trace
+            msg["trace"] = True
+            self._rpc_meta[self._req_seq] = {
+                "ts": ctx["ts"], "rids": list(ctx["rids"]),
+                "pid": h.pid, "eid": executor_id,
+                "model": getattr(model, "model_id", "?")}
+            while len(self._rpc_meta) > 256:
+                self._rpc_meta.popitem(last=False)
         t0 = _time.perf_counter()
         h.channel.send(msg)
         if self._faults is not None:
@@ -625,6 +682,10 @@ class ProcBackend(LocalBackend):
         rpc_wall = _time.perf_counter() - t0
         ser += ser2
         self.ser_seconds += ser
+        if ctx is not None and reply.get("spans"):
+            meta = self._rpc_meta.get(reply.get("req"))
+            if meta is not None:
+                self._record_worker_spans(reply["spans"], meta)
         if reply["kind"] == "exec_err":
             raise RuntimeError(
                 f"worker {executor_id}: {reply.get('error')}")
@@ -684,6 +745,7 @@ class ProcBackend(LocalBackend):
                         # zombie/duplicate traffic: stale lease, provably
                         # rejected — the cross-process dispatch-epoch guard
                         self.n_fenced += 1
+                        self._note_fenced_reply(m)
                         continue
                     self.n_exec_applied += 1
                     return m, ser
@@ -695,6 +757,67 @@ class ProcBackend(LocalBackend):
             if now > deadline:
                 self.supervisor.kill(executor_id)
                 raise WorkerDied(executor_id, "stall")
+
+    # ----------------------------------------------------------- telemetry
+    def _record_worker_spans(self, spans: Sequence[Dict[str, Any]],
+                             meta: Dict[str, Any],
+                             fenced: bool = False) -> None:
+        """Rebase worker-recorded spans (wall offsets relative to RPC
+        receipt) onto the dispatch's virtual timestamp and emit them on
+        the worker's process track.  Fenced zombie replies land on a
+        dedicated ``fenced`` thread — their slices must not interleave
+        with live work an adopted worker serves later — orphaned from the
+        flow, but still attributed to the request trace that issued the
+        RPC."""
+        if self.co is None:
+            return
+        tr = self.co.tracer
+        if not tr.enabled or not spans or meta.get("pid") is None:
+            return
+        pid = meta["pid"]
+        tid = "fenced" if fenced else "worker"
+        rids = meta.get("rids") or []
+        trace = rids[0] if rids else None
+        base = meta["ts"]
+        first_ts: Optional[float] = None
+        for s in spans:
+            ts = base + max(0.0, float(s.get("t0", 0.0)))
+            if first_ts is None:
+                first_ts = ts
+            args = dict(s.get("args") or {})
+            args["executor"] = meta.get("eid")
+            args["rids"] = list(rids)
+            if fenced:
+                args["fenced"] = True
+            tr.span(s.get("name", "?"), ts, float(s.get("dur", 0.0)),
+                    pid=pid, tid=tid,
+                    cat="fenced" if fenced else (s.get("cat") or "worker"),
+                    trace=trace, args=args)
+        if first_ts is not None and not fenced:
+            # flow steps stitch the request across the process boundary;
+            # step=True so the root stays on the coordinator's dispatch
+            # slice (recorded later, timestamped earlier)
+            for rid in rids:
+                tr.flow(rid, first_ts, pid, tid, step=True)
+
+    def _note_fenced_reply(self, m: Dict[str, Any]) -> None:
+        """A provably-stale reply was just fenced: surface it on the
+        timeline, attributed to the request trace whose RPC produced it
+        (span context retained in ``_rpc_meta``)."""
+        if self.co is None or not self.co.tracer.enabled:
+            return
+        meta = self._rpc_meta.get(m.get("req"))
+        if meta is None or meta.get("pid") is None:
+            return
+        tr = self.co.tracer
+        rids = meta.get("rids") or []
+        tr.instant("fenced_reply", self.co.now, meta["pid"], "fenced",
+                   cat="fenced", trace=rids[0] if rids else None,
+                   args={"executor": meta.get("eid"),
+                         "model": meta.get("model"),
+                         "kind": m.get("kind"), "rids": list(rids)})
+        if m.get("spans"):
+            self._record_worker_spans(m["spans"], meta, fenced=True)
 
     # ---------------------------------------------------------- accounting
     @property

@@ -184,6 +184,10 @@ class FrameChannel:
         self.n_dup_frames = 0
         self.n_delayed_frames = 0
         self.n_crc_errors = 0
+        # telemetry: when set (tracing on), accepted heartbeats append
+        # their wall receive time here (bounded); the proc backend drains
+        # it into worker-track instants during the liveness sweep
+        self.hb_trace: Optional[List[float]] = None
 
     # ------------------------------------------------------------- send
     def send(self, msg: Dict[str, Any]) -> None:
@@ -218,6 +222,8 @@ class FrameChannel:
             self.n_frames_rx += 1
             if msg.get("kind") == "hb":
                 self.n_hb_rx += 1
+                if self.hb_trace is not None and len(self.hb_trace) < 4096:
+                    self.hb_trace.append(now)
                 continue
             if msg.get("kind") == "hello":
                 continue

@@ -9,6 +9,7 @@ from repro.sim.metrics import (
     mean_fleet_size,
     mean_latency,
     percentile_latency,
+    quantile,
     slo_attainment,
 )
 from repro.sim.monolithic import MonolithicSystem, WorkflowSpec

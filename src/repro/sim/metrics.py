@@ -34,22 +34,45 @@ def slo_attainment(records: Sequence[RequestRecord]) -> float:
 
 
 def mean_latency(records: Sequence[RequestRecord]) -> float:
+    """Mean latency over *completed* records.  Returns ``NaN`` when no
+    record completed (rejected/unfinished requests have no latency) —
+    callers must treat NaN as "no data", not as zero latency."""
     lats = [r.latency for r in records if r.latency is not None]
     return sum(lats) / len(lats) if lats else float("nan")
 
 
+def quantile(sorted_vals: Sequence[float], q: float) -> float:
+    """Linearly interpolated quantile of an already-sorted sequence
+    (numpy's default ``linear`` method): index ``q * (n - 1)`` with
+    fractional positions interpolated between neighbours.  The previous
+    ``int(q * n)`` index was biased — p50 of 2 samples read the max, and
+    p99 of 100 samples hit the last element only via the min-clamp."""
+    if not sorted_vals:
+        return float("nan")
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile q={q} outside [0, 1]")
+    pos = q * (len(sorted_vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
 def percentile_latency(records: Sequence[RequestRecord], q: float) -> float:
+    """Interpolated latency quantile over completed records (see
+    :func:`quantile`).  Returns ``NaN`` when no record completed."""
     lats = sorted(r.latency for r in records if r.latency is not None)
     if not lats:
         return float("nan")
-    idx = min(len(lats) - 1, int(q * len(lats)))
-    return lats[idx]
+    return quantile(lats, q)
 
 
 def goodput(records: Sequence[RequestRecord], duration: float) -> float:
-    """Attained requests per second."""
+    """Attained requests per second.  A non-positive ``duration`` has no
+    well-defined rate: returns ``NaN`` (previously 0.0, which silently
+    read as "zero goodput" in comparisons)."""
     if duration <= 0:
-        return 0.0
+        return float("nan")
     return sum(1 for r in records if r.attained) / duration
 
 
@@ -90,6 +113,5 @@ def latency_cdf(records: Sequence[RequestRecord], points: int = 50) -> List[tupl
     out = []
     for i in range(points + 1):
         q = i / points
-        idx = min(len(lats) - 1, int(q * len(lats)))
-        out.append((lats[idx], q))
+        out.append((quantile(lats, q), q))
     return out

@@ -1,0 +1,89 @@
+"""Sim metrics: interpolated quantiles and explicit NaN semantics."""
+
+import math
+
+import pytest
+
+from repro.sim import (
+    RequestRecord,
+    goodput,
+    latency_cdf,
+    mean_latency,
+    percentile_latency,
+    quantile,
+)
+
+
+def _done(latency, deadline=None):
+    return RequestRecord(arrival=0.0, workflow="w", deadline=deadline,
+                         completion=latency)
+
+
+# --------------------------------------------------------------------------
+# quantile: linear interpolation (numpy 'linear' method)
+# --------------------------------------------------------------------------
+
+def test_quantile_interpolates_between_neighbours():
+    assert quantile([1.0, 2.0], 0.5) == 1.5
+    vals = [float(i) for i in range(1, 101)]           # 1..100
+    assert quantile(vals, 0.0) == 1.0
+    assert quantile(vals, 1.0) == 100.0
+    # pos = 0.99 * 99 = 98.01 -> between 99 and 100
+    assert quantile(vals, 0.99) == pytest.approx(99.01)
+
+
+def test_quantile_matches_numpy_linear():
+    np = pytest.importorskip("numpy")
+    vals = sorted([0.01, 0.3, 1.7, 2.2, 4.4, 5.0, 9.1])
+    for q in (0.0, 0.1, 0.25, 0.5, 0.9, 0.99, 1.0):
+        assert quantile(vals, q) == pytest.approx(float(np.quantile(vals, q)))
+
+
+def test_quantile_median_bias_fixed():
+    # the old int(q * n) index read the MAX of 2 samples as the median
+    assert quantile([1.0, 3.0], 0.5) == 2.0
+
+
+def test_quantile_empty_and_out_of_range():
+    assert math.isnan(quantile([], 0.5))
+    with pytest.raises(ValueError):
+        quantile([1.0], 1.5)
+    with pytest.raises(ValueError):
+        quantile([1.0], -0.1)
+
+
+# --------------------------------------------------------------------------
+# NaN semantics: "no data" is not "zero"
+# --------------------------------------------------------------------------
+
+def test_mean_and_percentile_latency_nan_without_completions():
+    assert math.isnan(mean_latency([]))
+    assert math.isnan(percentile_latency([], 0.5))
+    rejected = RequestRecord(arrival=0.0, workflow="w", deadline=1.0,
+                             rejected=True)
+    assert math.isnan(mean_latency([rejected]))
+    assert math.isnan(percentile_latency([rejected], 0.9))
+
+
+def test_mean_and_percentile_latency_values():
+    recs = [_done(1.0), _done(2.0), _done(4.0)]
+    assert mean_latency(recs) == pytest.approx(7.0 / 3.0)
+    assert percentile_latency(recs, 0.5) == 2.0
+    assert percentile_latency(recs, 1.0) == 4.0
+
+
+def test_goodput_zero_duration_is_nan():
+    r = _done(1.0, deadline=10.0)
+    assert r.attained
+    assert math.isnan(goodput([r], 0.0))
+    assert math.isnan(goodput([r], -1.0))
+    assert goodput([r], 2.0) == 0.5
+
+
+def test_latency_cdf_endpoints_interpolated():
+    recs = [_done(1.0), _done(2.0), _done(4.0)]
+    cdf = latency_cdf(recs, points=4)
+    assert cdf[0] == (1.0, 0.0)
+    assert cdf[-1] == (4.0, 1.0)
+    assert all(a[0] <= b[0] for a, b in zip(cdf, cdf[1:]))
+    assert latency_cdf([]) == []
