@@ -24,11 +24,11 @@ CLI: ``python -m benchmarks.bench_chaos [--smoke]``; writes
 from __future__ import annotations
 
 import argparse
-import json
 import os
 from typing import Any, Dict, Optional
 
 from benchmarks.common import emit, run_lego_trace
+from benchmarks.emit import write_bench_json
 from repro.core import FaultPlane, LocalBackend, Scheduler, ServingSystem
 from repro.diffusion import make_basic_workflow, table2_setting
 from repro.sim import check_invariants, generate_trace
@@ -151,14 +151,14 @@ def run(smoke: bool = False) -> Dict[str, Any]:
         "trace": trace_study(smoke=smoke),
         "recovery": recovery_parity(steps=3 if smoke else 5),
     }
-    with open(CHAOS_JSON, "w") as f:
-        json.dump(result, f, indent=2)
     ok = (result["trace"]["within_10pct"]
           and result["recovery"]["bitexact"]
           and result["trace"]["baseline"]["invariants_ok"]
           and result["trace"]["crash_revive"]["invariants_ok"]
           and result["trace"]["mixed"]["invariants_ok"]
           and result["recovery"]["invariants_ok"])
+    write_bench_json("chaos", result, path=CHAOS_JSON,
+                     gates={"chaos_acceptance": ok})
     emit("chaos_acceptance", float(ok),
          f"ratio={result['trace']['chaos_ratio']:.3f};"
          f"bitexact={result['recovery']['bitexact']}")

@@ -34,12 +34,12 @@ CLI: ``python -m benchmarks.bench_multitenant [--smoke]``; writes
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 from typing import Any, Dict, List
 
 from benchmarks.common import emit
+from benchmarks.emit import write_bench_json
 
 OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_multitenant.json")
@@ -144,8 +144,8 @@ def run(smoke: bool = False) -> Dict[str, Any]:
         "n64_speedup": at64["speedup"],
         "pass_1p3x": at64["speedup"] >= 1.3,
     }
-    with open(OUT_JSON, "w") as f:
-        json.dump(result, f, indent=2)
+    write_bench_json("multitenant", result, path=OUT_JSON,
+                     gates={"pass_1p3x": result["pass_1p3x"]})
     return result
 
 

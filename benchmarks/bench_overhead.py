@@ -17,11 +17,11 @@ CLI: ``python -m benchmarks.bench_overhead [--study segments] [--smoke]``
 runs one study standalone (the CI smoke job uses this)."""
 
 import argparse
-import json
 import os
 import time
 
 from benchmarks.common import emit, run_lego_trace
+from benchmarks.emit import write_bench_json
 from repro.core import LocalBackend, Scheduler, ServingSystem
 from repro.diffusion import FAMILIES, ModelSet, make_basic_workflow, table2_setting
 from repro.sim import generate_trace
@@ -161,10 +161,10 @@ def batched_exec_study(trials: int = 24, steps: int = 2) -> None:
              f"({row['speedup_vs_sequential']:.2f}x, {arm.forwards} vs "
              f"{seq.forwards} forwards, "
              f"{row['dispatch_overhead_us']:.0f}us/dispatch overhead)")
-    with open(BATCHED_JSON, "w") as f:
-        json.dump(rows, f, indent=2)
     mono = all(rows[i + 1]["images_per_s"] >= rows[i]["images_per_s"]
                for i in range(len(rows) - 1))
+    write_bench_json("batched_exec", rows, path=BATCHED_JSON,
+                     gates={"throughput_monotone": mono})
     emit("s75_batched_exec_monotone", float(mono),
          f"throughput monotone B=1..8: {mono}; wrote {BATCHED_JSON}")
 
@@ -297,8 +297,9 @@ def segments_study(trials: int = 12, steps: int = 8, high_n: int = 6) -> None:
         "adaptive_recovery_low": rec_low,
         "adaptive_recovery_high": rec_high,
     }
-    with open(SEGMENTS_JSON, "w") as f:
-        json.dump({"rows": rows, "summary": summary}, f, indent=2)
+    write_bench_json("segments", {"rows": rows, "summary": summary},
+                     path=SEGMENTS_JSON,
+                     gates={"monotone_low_load": mono})
     emit("s75_segments_summary", gain * 100,
          f"monotone={mono}; S=full vs S=1: {gain:.2f}x; adaptive recovers "
          f"{100*rec_low:.0f}% (low) / {100*rec_high:.0f}% (high) of best "

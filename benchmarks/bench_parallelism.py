@@ -25,7 +25,6 @@ Two arms:
 
 from __future__ import annotations
 
-import json
 import os
 import statistics
 import subprocess
@@ -33,6 +32,7 @@ import sys
 import time
 
 from benchmarks.common import emit, run_lego_trace
+from benchmarks.emit import write_bench_json
 from repro.core import ProfileStore, Scheduler
 from repro.core.profiles import GPU_H800
 from repro.diffusion import FAMILIES, ModelSet, make_controlnet_workflow
@@ -164,8 +164,8 @@ def sharded_study(trials: int = 15, wave: int = 8) -> None:
              f"devices={row['devices']})")
     mono = all(rows[i + 1]["images_per_s"] >= rows[i]["images_per_s"]
                for i in range(len(rows) - 1))
-    with open(PARALLELISM_JSON, "w") as f:
-        json.dump(rows, f, indent=2)
+    write_bench_json("parallelism", rows, path=PARALLELISM_JSON,
+                     gates={"throughput_monotone": mono})
     emit("sharded_backbone_monotone", float(mono),
          f"throughput monotone k=1..4: {mono}; wrote {PARALLELISM_JSON}")
 

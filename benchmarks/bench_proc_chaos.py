@@ -31,13 +31,13 @@ CLI: ``python -m benchmarks.bench_proc_chaos [--smoke]``; writes
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import tempfile
 import time
 from typing import Any, Dict, List, Optional
 
 from benchmarks.common import emit
+from benchmarks.emit import write_bench_json
 
 PROC_JSON = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_proc_chaos.json")
@@ -295,8 +295,8 @@ def run(smoke: bool = False) -> Dict[str, Any]:
         emit("proc_chaos_acceptance", float(ok),
              f"ratio={result['trace']['proc_chaos_ratio']:.3f};"
              f"bitexact={result['recovery']['bitexact']}")
-    with open(PROC_JSON, "w") as f:
-        json.dump(result, f, indent=2)
+    write_bench_json("proc_chaos", result, path=PROC_JSON,
+                     gates={"acceptance_ok": result.get("acceptance_ok")})
     return result
 
 

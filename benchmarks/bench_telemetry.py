@@ -20,11 +20,11 @@ check with tiny trial counts — not a measurement).
 """
 
 import argparse
-import json
 import os
 import time
 
 from benchmarks.common import emit
+from benchmarks.emit import write_bench_json
 from repro.core import (
     LocalBackend,
     ProcBackend,
@@ -185,9 +185,7 @@ def run(smoke: bool = False) -> None:
             n=200_000 if smoke else 2_000_000),
         "proc": proc_overhead_study(steps=3 if smoke else 5),
     }
-    with open(TELEMETRY_JSON, "w") as f:
-        json.dump(out, f, indent=1)
-        f.write("\n")
+    write_bench_json("telemetry", out, path=TELEMETRY_JSON, indent=1)
 
 
 def main() -> None:

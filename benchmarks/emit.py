@@ -1,0 +1,112 @@
+"""Shared ``BENCH_*.json`` envelope writer.
+
+Every benchmark that persists results to a ``BENCH_<study>.json`` file at
+the repo root routes through :func:`write_bench_json` so the artifacts
+share one schema: a top-level envelope with the study name, schema
+version, git revision, generation timestamp, host/device fingerprint and
+optional pass/fail gate fields, with the study-specific payload nested
+under ``"data"``.  Downstream tooling (dashboards, regression diffing)
+can then treat the files uniformly without per-study parsing.
+
+The envelope::
+
+    {
+      "study": "rawspeed",
+      "schema_version": 1,
+      "git_rev": "2d05512",          # "unknown" outside a git checkout
+      "generated_at": "2026-08-09T12:00:00Z",
+      "host": {
+        "platform": "...", "python": "3.11.x", "cpu_count": 8,
+        "jax": "0.4.x", "backend": "cpu", "device_count": 1
+      },
+      "gates": {"speedup_ok": true, ...},   # omitted when None
+      "data": <study payload, unchanged from the pre-envelope schema>
+    }
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import platform
+import subprocess
+import sys
+from typing import Any, Dict, Optional
+
+SCHEMA_VERSION = 1
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=_REPO_ROOT, stderr=subprocess.DEVNULL, text=True,
+        ).strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _host_info() -> Dict[str, Any]:
+    info: Dict[str, Any] = {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        # physical cores: jax's forced host-device count can exceed the
+        # hardware, and wall-clock scaling results only make sense
+        # against this number
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import jax
+
+        info["jax"] = jax.__version__
+        info["backend"] = jax.default_backend()
+        info["device_count"] = jax.device_count()
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        info["jax"] = None
+    return info
+
+
+def bench_envelope(
+    study: str,
+    data: Any,
+    gates: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """The shared envelope around one study's payload (pure; no I/O)."""
+    env: Dict[str, Any] = {
+        "study": study,
+        "schema_version": SCHEMA_VERSION,
+        "git_rev": _git_rev(),
+        "generated_at": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "host": _host_info(),
+    }
+    if gates is not None:
+        env["gates"] = gates
+    env["data"] = data
+    return env
+
+
+def write_bench_json(
+    study: str,
+    data: Any,
+    path: Optional[str] = None,
+    gates: Optional[Dict[str, Any]] = None,
+    indent: int = 2,
+) -> Dict[str, Any]:
+    """Wrap ``data`` in the shared envelope and write it to ``path``
+    (default ``<repo root>/BENCH_<study>.json``).  Returns the envelope."""
+    if path is None:
+        path = os.path.join(_REPO_ROOT, f"BENCH_{study}.json")
+    env = bench_envelope(study, data, gates=gates)
+    with open(path, "w") as f:
+        json.dump(env, f, indent=indent)
+        f.write("\n")
+    return env
+
+
+if __name__ == "__main__":  # smoke: print an empty envelope
+    json.dump(bench_envelope("smoke", {}), sys.stdout, indent=2)
+    print()

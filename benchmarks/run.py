@@ -20,10 +20,12 @@ from benchmarks import (
     bench_chaos,
     bench_datafetch,
     bench_latency_throughput,
+    bench_multitenant,
     bench_overhead,
     bench_parallelism,
     bench_proc_chaos,
     bench_programmability,
+    bench_rawspeed,
     bench_scaling,
     bench_sharing,
     bench_slo_scale,
@@ -51,7 +53,9 @@ ALL = [
     ("s75_overhead", bench_overhead),
     ("s6_chaos", bench_chaos),
     ("s7_proc_chaos", bench_proc_chaos),
+    ("multitenant", bench_multitenant),
     ("s8_telemetry", bench_telemetry),
+    ("s9_rawspeed", bench_rawspeed),
     ("roofline", roofline),
 ]
 
@@ -70,7 +74,8 @@ def main() -> None:
         try:
             if args.quick and name == "fig9_rate":
                 mod.run(settings=("s1", "s6"), rates=(1.0, 2.0))
-            elif args.quick and name == "s8_telemetry":
+            elif args.quick and name in ("multitenant", "s8_telemetry",
+                                         "s9_rawspeed"):
                 mod.run(smoke=True)
             else:
                 mod.run()

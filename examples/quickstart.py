@@ -3,10 +3,13 @@
 Composes the SD3-family workflow with the Python DSL, registers it, and
 really executes it (tiny-scale models) on the host device through the
 full LegoDiffusion stack: compiler -> scheduler -> executors -> data
-engine.  Saves the generated image as quickstart_image.npy.
+engine.  Saves the generated image as examples/quickstart_image.npy
+(next to this script, regardless of the working directory).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+
+import os
 
 import numpy as np
 
@@ -26,11 +29,13 @@ system.run()
 
 image_key = request.ref_key(request.graph.outputs["image"])
 image = np.asarray(system.coordinator.engine.value_of(image_key))
-np.save("quickstart_image.npy", image)
+out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "quickstart_image.npy")
+np.save(out_path, image)
 
 c = system.coordinator
 print(f"status: {request.status}  nodes executed: {len(c.dispatch_log)}")
 print(f"image: {image.shape}, range [{image.min():.3f}, {image.max():.3f}]")
 print(f"data engine: {c.engine.num_transfers} transfers, "
       f"{c.engine.bytes_transferred/2**20:.1f} MiB moved")
-print("saved quickstart_image.npy")
+print(f"saved {os.path.relpath(out_path)}")

@@ -49,6 +49,31 @@ class OutOfMemory(RuntimeError):
     pass
 
 
+class ForwardLog(deque):
+    """Bounded dispatch-accounting log: ``(model_id, batch_size)`` per
+    real forward.  A long-running serving process must not grow this
+    without bound, so the log is a ring of the most recent
+    ``REPRO_FORWARD_LOG_CAP`` entries (default 4096); overwritten
+    entries are counted in ``dropped`` (scraped as
+    ``backend_forward_log_dropped``) so consumers can tell a truncated
+    history from a short one."""
+
+    def __init__(self, cap: Optional[int] = None) -> None:
+        if cap is None:
+            cap = int(os.environ.get("REPRO_FORWARD_LOG_CAP", "4096"))
+        super().__init__(maxlen=max(1, cap))
+        self.dropped = 0
+
+    def append(self, item: Any) -> None:
+        if len(self) == self.maxlen:
+            self.dropped += 1
+        super().append(item)
+
+    def extend(self, items: Any) -> None:
+        for item in items:
+            self.append(item)
+
+
 class Executor:
     def __init__(
         self,
@@ -377,7 +402,8 @@ class LocalBackend:
         self.adapter_pool = AdapterPool(adapter_pool_bytes)
         self.multilora_forwards = 0
         # (model_id, batch_size) per real forward — dispatch accounting
-        self.forward_log: List[Tuple[str, int]] = []
+        # (bounded ring; see ForwardLog)
+        self.forward_log: ForwardLog = ForwardLog()
         # cumulative measured device seconds (load folds + executes):
         # lets callers separate control-plane overhead from real compute
         self.exec_seconds: float = 0.0
@@ -453,6 +479,11 @@ class LocalBackend:
     @property
     def folded_resident_bytes(self) -> float:
         return sum(self._folded_bytes.values())
+
+    @property
+    def forward_log_dropped(self) -> int:
+        """Entries the bounded ``forward_log`` ring has overwritten."""
+        return getattr(self.forward_log, "dropped", 0)
 
     def unload(self, model_id: str) -> None:
         self._components.pop(model_id, None)

@@ -69,6 +69,7 @@ class ModelCost:
         lora_rank: int = 0,
         lora_flops_per_rank: float = 0.0,
         lora_bytes_per_adapter: float = 0.0,
+        quantizable: bool = False,
     ) -> None:
         self.flops_per_item = float(flops_per_item)
         self.param_bytes = float(param_bytes)
@@ -81,6 +82,11 @@ class ModelCost:
         self.lora_rank = int(lora_rank)
         self.lora_flops_per_rank = float(lora_flops_per_rank)
         self.lora_bytes_per_adapter = float(lora_bytes_per_adapter)
+        # ``quantizable`` marks models whose matmul-dominated weights ride
+        # the REPRO_QUANT side-structure (backbones, text encoders,
+        # controlnets — not VAEs): analytic profiles scale their compute
+        # and residency terms by the active quant mode's roofline factors.
+        self.quantizable = bool(quantizable)
 
 
 class Model(abc.ABC):
@@ -250,6 +256,15 @@ class Model(abc.ABC):
     # the scheduler then stops partitioning batches by patch set, and the
     # backend routes mixed batches to :meth:`execute_batch_multilora`.
     supports_multilora: bool = False
+
+    # ------------------------------------------------- pipeline overlap
+    # True when this model's forward may be dispatched asynchronously
+    # onto an executor that is still busy running a denoise segment
+    # (REPRO_OVERLAP): its compute hides under the in-flight segment
+    # window and the timeline only pays the EXPOSED remainder (see
+    # ``LatencyProfile.exposed_cost``).  Safe for stateless post-stage
+    # work like VAE decode — never for segment ops themselves.
+    overlappable: bool = False
 
     def execute_batch_multilora(
         self,

@@ -60,6 +60,23 @@ GPU_H800 = HardwareSpec(
 )
 
 
+# Roofline factors for quantized forwards on a QUANTIZABLE model's cost
+# (REPRO_QUANT; identity when off).  int8 is w8a8: the MXU issues int8
+# MACs at 2x the bf16 rate and the resident weights halve vs the bf16
+# baseline the roofline prices.  fp8 here is weight-only storage (the
+# matmul upcasts): residency halves, issue rate does not.
+QUANT_COMPUTE_SCALE = {"off": 1.0, "int8": 0.5, "fp8": 1.0}
+QUANT_PARAM_SCALE = {"off": 1.0, "int8": 0.5, "fp8": 0.5}
+
+
+def _quant_mode() -> str:
+    # core -> nn is a one-way import (nn.layers only touches jax); read
+    # lazily so profile construction never forces the flag module early
+    from repro.nn.layers import quant_mode
+
+    return quant_mode()
+
+
 class LatencyProfile:
     """Analytic (model × batch × parallelism) → seconds estimates."""
 
@@ -75,9 +92,18 @@ class LatencyProfile:
     SERIAL_FRACTION = 0.05
 
     # -------------------------------------------------------------- terms
+    def _quant_scales(self) -> tuple:
+        """(compute_scale, param_scale) under the active quant mode —
+        identity for models whose weights never quantize (VAEs)."""
+        if not self.cost.quantizable:
+            return 1.0, 1.0
+        mode = _quant_mode()
+        return QUANT_COMPUTE_SCALE[mode], QUANT_PARAM_SCALE[mode]
+
     def compute_term(self, batch: int, k: int = 1) -> float:
         # MXU efficiency ~0.6 of peak for well-tiled matmuls
-        t = (batch * self.cost.flops_per_item) / (0.6 * self.hw.peak_flops)
+        cs, _ = self._quant_scales()
+        t = (cs * batch * self.cost.flops_per_item) / (0.6 * self.hw.peak_flops)
         if k <= 1:
             return t
         return t * (self.SERIAL_FRACTION + (1 - self.SERIAL_FRACTION) / k)
@@ -85,7 +111,9 @@ class LatencyProfile:
     def memory_term(self, batch: int, k: int = 1) -> float:
         # latent parallelism replicates the weights on every participant
         # (CFG branches are data-parallel, not tensor-parallel)
-        bytes_moved = self.cost.param_bytes + batch * self.cost.act_io_bytes / k
+        _, ps = self._quant_scales()
+        bytes_moved = (ps * self.cost.param_bytes
+                       + batch * self.cost.act_io_bytes / k)
         return bytes_moved / self.hw.hbm_bw
 
     def collective_term(self, batch: int, k: int = 1) -> float:
@@ -122,13 +150,35 @@ class LatencyProfile:
                   + lora_bytes / self.hw.hbm_bw)
         return s * (t + self.collective_term(batch, k)) + self.hw.dispatch_overhead
 
+    def exposed_cost(self, full: float, overlap_window: float) -> float:
+        """Price of an OVERLAPPED dispatch (REPRO_OVERLAP): ``full``
+        seconds of work launched while the target executor still has
+        ``overlap_window`` seconds of an in-flight denoise segment to
+        run.  The hidden portion rides the segment window for free; only
+        the exposed remainder extends the executor's occupancy — floored
+        at the fixed dispatch overhead, which async dispatch never
+        hides."""
+        return max(self.hw.dispatch_overhead,
+                   full - max(0.0, overlap_window))
+
+    def exposed_infer_time(self, batch: int, k: int = 1,
+                           steps: Optional[int] = None, adapters: int = 0,
+                           overlap_window: float = 0.0) -> float:
+        """:meth:`infer_time` priced at the exposed (non-overlapped)
+        cost given ``overlap_window`` seconds of hiding — what the
+        scheduler charges an overlapped decode placement."""
+        return self.exposed_cost(
+            self.infer_time(batch, k, steps=steps, adapters=adapters),
+            overlap_window)
+
     def speedup(self, batch: int, k: int) -> float:
         return self.infer_time(batch, 1) / self.infer_time(batch, k)
 
     def load_time(self) -> float:
         if self.cost.param_bytes <= 0:
             return 0.0
-        return self.cost.param_bytes / self.hw.host_load_bw + 0.01
+        _, ps = self._quant_scales()
+        return ps * self.cost.param_bytes / self.hw.host_load_bw + 0.01
 
     def fetch_time(self, nbytes: float, cross_pod: bool = False) -> float:
         bw = self.hw.dcn_bw if cross_pod else self.hw.ici_bw
@@ -160,7 +210,10 @@ class LatencyProfile:
 
     @property
     def param_bytes(self) -> float:
-        return self.cost.param_bytes
+        """HBM footprint the executor's capacity accounting charges —
+        quantized residency for quantizable models under REPRO_QUANT."""
+        _, ps = self._quant_scales()
+        return ps * self.cost.param_bytes
 
 
 def node_segment_steps(node: Any) -> Optional[int]:

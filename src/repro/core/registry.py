@@ -65,6 +65,7 @@ class ServingSystem:
         replicate_segments: bool = False,
         tracer: Any = None,
         metrics: Any = None,
+        overlap: Optional[bool] = None,
     ) -> None:
         """``autoscaler`` enables per-model elastic scaling: pass ``True``
         for the default policy, an :class:`AutoscalerConfig`, or a built
@@ -131,6 +132,8 @@ class ServingSystem:
             replicate_segments=replicate_segments,
             tracer=tracer,
             metrics=metrics,
+            # None -> the REPRO_OVERLAP environment default
+            overlap=overlap,
         )
 
     # ---------------------------------------------------------------- API

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import os
 import time as _time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -44,6 +45,7 @@ from repro.core.executor import (
     WARMING,
     Executor,
     LocalBackend,
+    OutOfMemory,
     ShardedBackend,
 )
 from repro.core.faults import (
@@ -63,6 +65,31 @@ PENDING, READY, RUNNING, AWAITING, DONE = "pending", "ready", "running", "awaiti
 SHED = "shed"   # terminal: the node's request was shed (retry budget/strand)
 
 _seq = itertools.count()
+
+# -------------------------------------------------- pipeline overlap flag
+#
+# ``REPRO_OVERLAP=1`` lets the coordinator dispatch an ``overlappable``
+# model (VAE decode) asynchronously onto an executor that is still
+# running a denoise segment: the decode's compute hides under the
+# segment's remaining window and the timeline pays only the EXPOSED
+# remainder (``LatencyProfile.exposed_cost``).  Read at Coordinator
+# construction, like the quant/donate flags are read at load time.
+
+_overlap_enabled: bool = os.environ.get(
+    "REPRO_OVERLAP", "0").lower() not in ("0", "false", "off", "")
+
+
+def set_overlap(enabled: bool) -> bool:
+    """Toggle denoise/decode pipeline overlap for Coordinators built
+    after the call; returns the previous value."""
+    global _overlap_enabled
+    prev = _overlap_enabled
+    _overlap_enabled = bool(enabled)
+    return prev
+
+
+def overlap_enabled() -> bool:
+    return _overlap_enabled
 
 
 class RequestNode:
@@ -243,6 +270,7 @@ class Coordinator:
         replicate_segments: bool = False,
         tracer: Optional[Any] = None,
         metrics: Optional[MetricsRegistry] = None,
+        overlap: Optional[bool] = None,
     ) -> None:
         self.executors = executors
         self.by_id = {e.id: e for e in executors}
@@ -298,6 +326,22 @@ class Coordinator:
         self._proc = bool(getattr(backend, "is_proc_plane", False))
         self.n_worker_deaths = 0          # WorkerDied handled (all reasons)
         self.n_heartbeat_deaths = 0       # ... of which: lease expiry
+        # ------------------------------------------------ pipeline overlap
+        # REPRO_OVERLAP: decode of batch N rides an executor still running
+        # batch N+1's denoise segment at exposed cost.  ``_seg_busy`` maps
+        # executor id -> (segment window end, segment model id) for the
+        # in-flight segment dispatch; ``_overlap_slot`` holds the window
+        # end an overlapped dispatch already consumed (ONE overlap per
+        # segment window — stacking more would hide unbounded work under
+        # one window); ``_open_overlap`` keeps overlapped telemetry
+        # records off the single-slot ``_open_batch`` so a decode span
+        # never clobbers the segment span it overlaps.
+        self.overlap = overlap_enabled() if overlap is None else bool(overlap)
+        self.n_overlap_dispatches = 0
+        self.overlap_hidden_seconds = 0.0
+        self._seg_busy: Dict[int, Tuple[float, str]] = {}
+        self._overlap_slot: Dict[int, float] = {}
+        self._open_overlap: Dict[int, Dict[str, Any]] = {}
         # ------------------------------------------------- telemetry plane
         # The tracer is the REPRO_TELEMETRY-gated no-op singleton unless
         # tracing is on: every instrumentation site below guards on
@@ -326,7 +370,8 @@ class Coordinator:
         reg.register_object("coordinator", self, (
             "n_submitted", "n_timeouts", "n_transient_retries",
             "n_requeues", "n_stranded", "n_worker_deaths",
-            "n_heartbeat_deaths", "control_plane_time"))
+            "n_heartbeat_deaths", "control_plane_time",
+            "n_overlap_dispatches", "overlap_hidden_seconds"))
         reg.register_object("datastore", self.engine, (
             "bytes_transferred", "num_transfers", "num_local_hits",
             "fetch_retries", "failed_fetches", "duplicate_puts",
@@ -342,7 +387,7 @@ class Coordinator:
         if self.backend is not None:
             reg.register_object("backend", self.backend, (
                 "exec_seconds", "folded_evictions", "multilora_forwards",
-                "n_injected_errors",
+                "n_injected_errors", "forward_log_dropped",
                 # proc plane (missing attributes are skipped at scrape)
                 "n_execs", "n_exec_replies", "n_exec_applied", "n_fenced",
                 "ser_seconds", "transport_seconds", "worker_seconds",
@@ -382,20 +427,28 @@ class Coordinator:
             return
         batch: ScheduledBatch = record["batch"]
         eid = batch.executor_ids[0]
-        if self._open_batch.get(eid) is record:
-            self._open_batch.pop(eid, None)
+        overlapped = bool(record.get("overlap"))
+        open_map = self._open_overlap if overlapped else self._open_batch
+        if open_map.get(eid) is record:
+            open_map.pop(eid, None)
+        # overlapped decode spans live on their own sub-track: they run
+        # CONCURRENTLY with the segment span on the executor's main
+        # track, and slices within one track must never partially overlap
+        track = f"exec{eid}:overlap" if overlapped else f"exec{eid}"
         rids = record.get("trace_rids") or []
+        args = {"model": batch.model_id, "batch_size": batch.batch_size,
+                "parallelism": batch.parallelism,
+                "segment_steps": batch.segment_steps,
+                "executors": list(batch.executor_ids),
+                "rids": list(rids), "status": status}
+        if overlapped:
+            args["overlap_window"] = batch.overlap_window
         self.tracer.span(
             f"dispatch {batch.model_id}", t0, self.now - t0,
-            COORDINATOR_PID, f"exec{eid}", cat="dispatch",
-            trace=rids[0] if rids else None,
-            args={"model": batch.model_id, "batch_size": batch.batch_size,
-                  "parallelism": batch.parallelism,
-                  "segment_steps": batch.segment_steps,
-                  "executors": list(batch.executor_ids),
-                  "rids": list(rids), "status": status})
+            COORDINATOR_PID, track, cat="dispatch",
+            trace=rids[0] if rids else None, args=args)
         for rid in rids:
-            self.tracer.flow(rid, t0, COORDINATOR_PID, f"exec{eid}")
+            self.tracer.flow(rid, t0, COORDINATOR_PID, track)
 
     # ----------------------------------------------------------- frontend
     def submit(
@@ -609,15 +662,20 @@ class Coordinator:
         if not ex.alive:
             return  # double fail event (e.g. crash_at + crash_every collide)
         if self._tele:
-            open_rec = self._open_batch.get(executor_id)
-            if open_rec is not None:
-                self._close_batch_span(open_rec, "executor_fail")
+            for open_rec in (self._open_batch.get(executor_id),
+                             self._open_overlap.get(executor_id)):
+                if open_rec is not None:
+                    self._close_batch_span(open_rec, "executor_fail")
             self.tracer.instant(
                 "executor_fail", self.now, COORDINATOR_PID, "control",
                 cat="fault", args={"executor": executor_id,
                                    "killed": kill_process})
         resident = list(ex.loaded)
         ex.fail()
+        # the in-flight segment window died with the executor: no decode
+        # may overlap it, and a revived executor starts with a clean slot
+        self._seg_busy.pop(executor_id, None)
+        self._overlap_slot.pop(executor_id, None)
         if self._proc and kill_process:
             # control-plane-initiated failure of a real fault domain: the
             # worker process actually dies (chaos crash events included)
@@ -819,7 +877,12 @@ class Coordinator:
             ex = self.by_id.get(eid)
             if ex is None or not ex.alive:
                 continue
-            ex.cancel(self.now)
+            if not record.get("overlap"):
+                # an overlapped decode shares its executor with the
+                # in-flight segment: cancelling would reclaim the
+                # SEGMENT's reservation too, so only a non-overlapped
+                # runaway frees the device early
+                ex.cancel(self.now)
             self._note_executor_failure(ex)
         stale = [rn for rn in batch.nodes
                  if rn.state == RUNNING
@@ -1009,11 +1072,33 @@ class Coordinator:
             rnode.ready_since = self.now
             self.ready.append(rnode)
 
+    def _overlap_candidates(self) -> List[Executor]:
+        """Busy executors an overlappable model may ride (REPRO_OVERLAP):
+        still inside an in-flight denoise-segment window, with that
+        window's single overlap slot unconsumed."""
+        if not self.overlap:
+            return []
+        out: List[Executor] = []
+        for e in self.executors:
+            if not e.is_serving or e.is_free(self.now):
+                continue
+            seg = self._seg_busy.get(e.id)
+            if seg is None or seg[0] <= self.now:
+                continue
+            if self._overlap_slot.get(e.id) == seg[0]:
+                continue
+            out.append(e)
+        return out
+
     def _schedule_cycle(self) -> None:
         if not self.ready:
             return
         free = [e for e in self.executors if e.is_free(self.now)]
-        if not free:
+        # None = overlap off; [] = on but no mid-flight candidates yet
+        # (the scheduler may still mint in-cycle candidates from segment
+        # dispatches, which need a free executor anyway)
+        overlap_pool = self._overlap_candidates() if self.overlap else None
+        if not free and not overlap_pool:
             return
         if self.backend is not None:
             # executable plane really needs input VALUES: hold nodes whose
@@ -1032,13 +1117,13 @@ class Coordinator:
             held = [rn for rn in self.ready if not deferred_ready(rn)]
             self.ready[:] = runnable
             try:
-                self._dispatch_cycle(free)
+                self._dispatch_cycle(free, overlap_pool)
             finally:
                 self.ready.extend(held)
             return
-        self._dispatch_cycle(free)
+        self._dispatch_cycle(free, overlap_pool)
 
-    def _dispatch_cycle(self, free) -> None:
+    def _dispatch_cycle(self, free, overlap_pool=None) -> None:
 
         def fetch_cost(batch: List[RequestNode], executor_id: int) -> float:
             keys: List[str] = []
@@ -1049,7 +1134,9 @@ class Coordinator:
         n_serving = sum(1 for e in self.executors if e.is_serving)
         low_load = len(self.inflight) < n_serving
         decisions = self.scheduler.schedule_cycle(self.ready, free, fetch_cost,
-                                                  low_load=low_load)
+                                                  low_load=low_load,
+                                                  overlap=overlap_pool,
+                                                  now=self.now)
         for d in decisions:
             self._dispatch(d)
 
@@ -1062,13 +1149,33 @@ class Coordinator:
                  if self.faults is not None else None)
         lead = self.by_id[batch.executor_ids[0]]
         profile = self.profiles.get(batch.model_id)
+        overlapped = batch.overlap_window > 0.0
         # model loads + patch state on every participating executor
         for eid in batch.executor_ids:
             ex = self.by_id[eid]
             if not ex.has_model(batch.model_id):
                 # dispatch targets are free, so every resident model is idle
-                # and LRU-evictable to make room
-                ex.ensure_capacity(profile.param_bytes)
+                # and LRU-evictable to make room — except on an overlapped
+                # dispatch, where the in-flight segment's model is live
+                # and must survive the decode load
+                protected = None
+                if overlapped:
+                    seg = self._seg_busy.get(eid)
+                    protected = {seg[1]} if seg is not None else None
+                try:
+                    ex.ensure_capacity(profile.param_bytes,
+                                       protected=protected)
+                except OutOfMemory:
+                    if not overlapped:
+                        raise
+                    # the decode cannot fit beside the running segment:
+                    # burn this window's slot and requeue for a normal
+                    # (free-executor) dispatch
+                    if eid in self._seg_busy:
+                        self._overlap_slot[eid] = self._seg_busy[eid][0]
+                    self._requeue_nodes(batch.nodes, count_retry=False)
+                    self._push(self.now, "kick", None)
+                    return
                 ex.mark_loaded(batch.model_id, profile.param_bytes)
             else:
                 ex.touch(batch.model_id)
@@ -1134,23 +1241,69 @@ class Coordinator:
             except WorkerDied as err:
                 self._abort_dispatch_on_death(batch, err)
                 return
+        if overlapped:
+            # async decode under the in-flight segment window: the hidden
+            # portion of the (measured or modeled) cost rides the window
+            # for free, only the exposed remainder occupies the timeline.
+            # The sim plane's l_infer is already exposed-priced by the
+            # scheduler; the executable plane's measured wall is not.
+            # Price against the ACTUAL remaining busy horizon — the
+            # segment the decision chased has executed (measured) by now,
+            # so the estimate in batch.overlap_window may be stale.
+            window = max(0.0, max(
+                self.by_id[eid].busy_until for eid in batch.executor_ids)
+                - self.now)
+            if self.backend is not None and fault != "hang":
+                full = duration
+                duration = profile.exposed_cost(duration, window)
+                self.overlap_hidden_seconds += max(0.0, full - duration)
+            else:
+                self.overlap_hidden_seconds += max(
+                    0.0, profile.infer_time(batch.batch_size, 1)
+                    - batch.l_infer)
+            self.n_overlap_dispatches += 1
         # a hung forward never reports back: occupy for the modeled
         # duration but push no completion — only the timeout recovers it
         base_duration = duration
         if fault == "slow":
             # gray failure: trips the timeout iff slow_factor > timeout_factor
             duration *= self.faults.slow_factor
+        done_at = self.now + duration
         for eid in batch.executor_ids:
-            self.by_id[eid].occupy(self.now, duration)
+            end = self.by_id[eid].occupy(self.now, duration)
+            if overlapped:
+                # the exposed occupancy APPENDS at the executor's busy
+                # horizon (the segment still owns the device until then):
+                # the decode surfaces at window end + exposed cost
+                done_at = max(done_at, end)
+        # virtual start of this dispatch's own occupancy window — equals
+        # ``now`` for a normal dispatch; timeout/crash anchor to it so an
+        # overlapped decode is not timed out while merely hidden
+        start = done_at - duration
+        if overlapped:
+            for eid in batch.executor_ids:
+                if eid in self._seg_busy:
+                    self._overlap_slot[eid] = self._seg_busy[eid][0]
+        elif getattr(batch.nodes[0].node.op, "is_segment", False):
+            # a fresh segment window opens: overlappable work may ride it
+            for eid in batch.executor_ids:
+                self._seg_busy[eid] = (self.by_id[eid].busy_until,
+                                       batch.model_id)
         record: Dict[str, Any] = {"batch": batch, "seqs": {}, "done": False}
+        if overlapped:
+            record["overlap"] = True
         if self._tele:
             # open the dispatch span now; it closes (and records) at the
             # first of batch_done / batch_timeout / executor failure, so
-            # slices on one executor track always nest
+            # slices on one executor track always nest (overlapped spans
+            # live in _open_overlap / their own sub-track)
             record["t0"] = self.now
             record["trace_rids"] = sorted(
                 {rn.request.rid for rn in batch.nodes})
-            self._open_batch[batch.executor_ids[0]] = record
+            if overlapped:
+                self._open_overlap[batch.executor_ids[0]] = record
+            else:
+                self._open_batch[batch.executor_ids[0]] = record
             h = self._h_queue_delay.labels(batch.model_id)
             for rn in batch.nodes:
                 if rn.ready_since is not None:
@@ -1162,14 +1315,14 @@ class Coordinator:
             rn.dispatch_seq += 1
             record["seqs"][rn.uid] = rn.dispatch_seq
         if fault != "hang":
-            self._push(self.now + duration, "batch_done", record)
+            self._push(done_at, "batch_done", record)
         if self.faults is not None:
             timeout = max(self.retry.timeout_floor,
                           self.retry.timeout_factor * base_duration)
-            self._push(self.now + timeout, "batch_timeout", record)
+            self._push(start + timeout, "batch_timeout", record)
         if fault == "crash":
             # the lead executor dies partway through the batch window
-            self._push(self.now + self.faults.crash_frac * duration,
+            self._push(start + self.faults.crash_frac * duration,
                        "executor_fail", lead.id)
 
     def _abort_dispatch_on_death(self, batch: ScheduledBatch,

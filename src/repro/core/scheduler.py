@@ -46,6 +46,13 @@ class ScheduledBatch:
     # patches through the backend's adapter pool instead of mutating the
     # executors' folded patch state
     multilora: bool = False
+    # > 0 for an OVERLAPPED dispatch (REPRO_OVERLAP): seconds of the
+    # target executor's in-flight denoise segment still to run at
+    # dispatch time.  ``l_infer`` is then already the EXPOSED price
+    # (``LatencyProfile.exposed_infer_time``), and the coordinator
+    # appends the occupancy at the executor's current busy horizon
+    # instead of claiming a free one.
+    overlap_window: float = 0.0
 
     @property
     def duration(self) -> float:
@@ -283,6 +290,65 @@ class Scheduler:
             max(s[3] for s in top),
         )
 
+    # --------------------------------------------------- overlap placement
+    def overlap_decision(
+        self,
+        ready: List[Any],
+        overlap_avail: Sequence[Tuple[Executor, float]],
+        data_fetch_cost: Callable[[List[Any], int], float],
+    ) -> Optional[ScheduledBatch]:
+        """Fallback placement when no executor is free (REPRO_OVERLAP):
+        dispatch the first ready node whose model declares
+        ``overlappable`` onto an executor still running a denoise
+        segment, pricing ``l_infer`` at the EXPOSED cost — the segment's
+        remaining window hides that much of the decode for free.
+        ``overlap_avail`` pairs each candidate with its window estimate.
+        FCFS is preserved in spirit: skipped heads have no free executor
+        to claim anyway, so running a later decode is work-conserving."""
+        head = next(
+            (rn for rn in ready
+             if getattr(getattr(getattr(rn, "node", None), "op", None),
+                        "overlappable", False)), None)
+        if head is None:
+            return None
+        batch = self.form_batch(head, ready)
+        profile = self.profiles.get(head.model_id)
+        want_patches = list(head.effective_patches)
+        best: Optional[Tuple[float, Executor, float, float, float, float, float]] = None
+        for e, window in overlap_avail:
+            l_data = data_fetch_cost(batch, e.id)
+            l_load = 0.0 if e.has_model(head.model_id) else profile.load_time()
+            swap = 0.0
+            if e.has_model(head.model_id) \
+                    and e.patches_on(head.model_id) != want_patches:
+                swap = self.profiles.hw.patch_swap_time
+            elif not e.has_model(head.model_id) and want_patches:
+                swap = self.profiles.hw.patch_swap_time
+            # overlapped dispatch is always k=1: its peers are busy, and
+            # a sharded decode could not interleave under the segment
+            l_infer = profile.exposed_infer_time(
+                len(batch), 1, overlap_window=window)
+            score = l_data + l_load + swap + l_infer
+            if best is None or score < best[0]:
+                best = (score, e, window, l_data, l_load, swap, l_infer)
+        if best is None:
+            return None
+        _, e, window, l_data, l_load, swap, l_infer = best
+        self.n_batches += 1
+        return ScheduledBatch(
+            nodes=batch,
+            model_id=head.model_id,
+            executor_ids=[e.id],
+            parallelism=1,
+            batch_size=len(batch),
+            l_data=l_data,
+            l_load=l_load,
+            l_infer=l_infer,
+            patch_swap=swap,
+            segment_steps=1,
+            overlap_window=window,
+        )
+
     # ------------------------------------------------------------ top-level
     def schedule_cycle(
         self,
@@ -290,16 +356,42 @@ class Scheduler:
         executors: Sequence[Executor],
         data_fetch_cost: Callable[[List[Any], int], float],
         low_load: bool = True,
+        overlap: Optional[Sequence[Executor]] = None,
+        now: float = 0.0,
     ) -> List[ScheduledBatch]:
         """One full scheduling cycle: greedily drain ready nodes onto free
-        executors.  ``ready`` is mutated (dispatched nodes removed)."""
+        executors.  ``ready`` is mutated (dispatched nodes removed).
+
+        ``overlap`` (REPRO_OVERLAP; ``None`` = feature off) lists busy
+        executors still running a denoise segment with a free overlap
+        slot.  Executors handed a segment WITHIN this cycle join the
+        candidate set too — a scheduling cycle runs exactly when
+        executors free up, so the decode that chases a segment is
+        almost always decided in the same cycle that dispatched it.
+        Once the free pool drains, overlappable models ride these
+        candidates at exposed cost."""
         decisions: List[ScheduledBatch] = []
         self.n_cycles += 1
         # only SERVING executors take work: warming/draining/reserve fleet
         # members are invisible to placement (caller pre-filters by freeness)
         avail = [e for e in executors if e.is_serving]
+        overlap_on = overlap is not None
+        overlap_avail: List[Tuple[Executor, float]] = (
+            [(e, max(0.0, e.busy_until - now)) for e in overlap
+             if e.is_serving] if overlap_on else [])
         ready.sort(key=self.order_key)
-        while ready and avail:
+        while ready and (avail or overlap_avail):
+            if not avail:
+                d = self.overlap_decision(ready, overlap_avail,
+                                          data_fetch_cost)
+                if d is None:
+                    break
+                decisions.append(d)
+                dispatched = set(id(n) for n in d.nodes)
+                ready[:] = [n for n in ready if id(n) not in dispatched]
+                overlap_avail = [(e, w) for e, w in overlap_avail
+                                 if e.id not in d.executor_ids]
+                continue
             head = ready[0]
             batch = self.form_batch(head, ready)
             n_queued = len(ready) - len(batch)
@@ -355,4 +447,11 @@ class Scheduler:
             ready[:] = [n for n in ready if id(n) not in dispatched]
             taken = set(e.id for e in targets)
             avail = [e for e in avail if e.id not in taken]
+            if overlap_on and getattr(getattr(head.node, "op", None),
+                                      "is_segment", False):
+                # the executors just claimed open a fresh segment window:
+                # later decisions in THIS cycle may overlap it, with the
+                # batch's own duration estimate as the hiding window
+                overlap_avail.extend(
+                    (e, decisions[-1].duration) for e in targets)
         return decisions

@@ -298,7 +298,9 @@ def _worker_main(host: str, port: int, worker_id: int, hb_interval: float,
                          "epoch": msg["epoch"], "worker": worker_id,
                          "outs": outs, "load_dt": load_dt,
                          "exec_dt": exec_dt,
-                         "forwards": backend.forward_log[n0:]}
+                         # forward_log is a bounded deque: materialize
+                         # before slicing off this RPC's entries
+                         "forwards": list(backend.forward_log)[n0:]}
                 if trace:
                     reply["spans"] = spans
                 send(reply)

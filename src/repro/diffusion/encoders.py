@@ -24,6 +24,8 @@ from repro.nn.layers import (
     grouped_lora_dense,
     init_mlp,
     layer_norm,
+    qdense,
+    quantize_dense,
     rms_norm,
     split,
 )
@@ -68,6 +70,31 @@ def init_text_encoder(
     }
 
 
+# the attention/MLP projections carry nearly all encoder parameters;
+# embeddings and norms stay fp32
+_QUANT_LAYER_KEYS = ("wq", "wk", "wv", "wo")
+
+
+def quantize_text_params(params: Params) -> Params:
+    """Quantize the per-layer projection weights per the active
+    ``REPRO_QUANT`` mode (identity when off)."""
+    layers = params.get("layers")
+    if not layers:
+        return params
+    new_layers = []
+    for p in layers:
+        np_ = {k: (quantize_dense(v) if k in _QUANT_LAYER_KEYS else v)
+               for k, v in p.items()}
+        mlp = np_.get("mlp")
+        if isinstance(mlp, dict):
+            np_["mlp"] = {k: (quantize_dense(v) if k in ("w1", "w2") else v)
+                          for k, v in mlp.items()}
+        new_layers.append(np_)
+    out = dict(params)
+    out["layers"] = new_layers
+    return out
+
+
 def text_encoder_apply(params: Params, token_ids: jax.Array, n_heads: int,
                        lora_stack: Params | None = None,
                        lora_idx: jax.Array | None = None) -> jax.Array:
@@ -84,16 +111,16 @@ def text_encoder_apply(params: Params, token_ids: jax.Array, n_heads: int,
         h = rms_norm(x, p["norm1"])
         bb, ss, d = h.shape
         hd = d // n_heads
-        q = (h @ p["wq"]).reshape(bb, ss, n_heads, hd)
-        k = (h @ p["wk"]).reshape(bb, ss, n_heads, hd)
-        v = (h @ p["wv"]).reshape(bb, ss, n_heads, hd)
+        q = qdense(h, p["wq"]).reshape(bb, ss, n_heads, hd)
+        k = qdense(h, p["wk"]).reshape(bb, ss, n_heads, hd)
+        v = qdense(h, p["wv"]).reshape(bb, ss, n_heads, hd)
         attn = gqa_attention(q, k, v, causal=False).reshape(bb, ss, d)
         if lora_stack is not None and li == n_layers - 1:
             x = x + grouped_lora_dense(
                 attn, p["wo"], lora_stack["a"], lora_stack["b"],
                 lora_idx.astype(jnp.int32), lora_stack["scales"])
         else:
-            x = x + attn @ p["wo"]
+            x = x + qdense(attn, p["wo"])
         x = x + gelu_mlp(p["mlp"], rms_norm(x, p["norm2"]))
     return rms_norm(x, params["final"])
 

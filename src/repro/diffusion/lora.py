@@ -21,11 +21,61 @@ import jax
 import jax.numpy as jnp
 
 from repro.diffusion.config import DiTConfig
-from repro.nn.layers import split
+from repro.kernels.quant_matmul.ops import (
+    dequantize_weight,
+    is_quantized,
+    quantize_weight,
+)
+from repro.nn.layers import quant_mode, split
 
 Params = Dict[str, Any]
 
 TARGETS = ("wq", "wk", "wv", "wo")
+
+# ------------------------------------------------- quantization awareness
+#
+# Quantize-on-fold: base weights and adapter factors may arrive as
+# QuantizedParams dicts (REPRO_QUANT).  Folding dequantizes the target,
+# applies the low-rank delta in f32, and REquantizes in the same mode as
+# the base — so the fold cache keeps the ~4x smaller representation and
+# a folded placement costs quantized bytes, not fp32 bytes.
+
+_FACTOR_KEYS = tuple(f"{t}_{s}" for t in TARGETS for s in ("a", "b"))
+
+
+def _mode_of(q: Params) -> str:
+    import jax.numpy as _jnp
+
+    return "int8" if q["qw"].dtype == _jnp.int8 else "fp8"
+
+
+def _requant_like(w: jax.Array, base) -> Any:
+    """Quantize ``w`` the way ``base`` was quantized (identity if the
+    base is a plain array)."""
+    if is_quantized(base):
+        return quantize_weight(w, _mode_of(base))
+    return w.astype(base.dtype)
+
+
+def quantize_lora(lora: Params) -> Params:
+    """Quantize a backbone adapter's A/B factors per the active
+    ``REPRO_QUANT`` mode (identity when off) — the AdapterPool and the
+    proc-plane adapter ships then carry int8/fp8 factors."""
+    mode = quant_mode()
+    if mode == "off":
+        return lora
+    return {k: (quantize_weight(v, mode) if k in _FACTOR_KEYS else v)
+            for k, v in lora.items()}
+
+
+def quantize_text_lora(tl: Params) -> Params:
+    """Quantized-factor form of a text-encoder adapter (see
+    :func:`quantize_lora`)."""
+    mode = quant_mode()
+    if mode == "off":
+        return tl
+    return {k: (quantize_weight(v, mode) if k in ("a", "b") else v)
+            for k, v in tl.items()}
 
 
 def init_lora(key: jax.Array, cfg: DiTConfig, rank: int = 8,
@@ -61,8 +111,14 @@ def fold_lora(params: Params, lora: Params) -> Params:
     new_layers = dict(params["layers"])
     new_img = dict(new_layers["img"])
     for t in TARGETS:
-        delta = jnp.einsum("ldr,lre->lde", lora[f"{t}_a"], lora[f"{t}_b"]) * scale
-        new_img[t] = new_layers["img"][t] + delta.astype(new_layers["img"][t].dtype)
+        a = dequantize_weight(lora[f"{t}_a"])
+        b = dequantize_weight(lora[f"{t}_b"])
+        delta = jnp.einsum("ldr,lre->lde", a, b) * scale
+        base = new_layers["img"][t]
+        if is_quantized(base):
+            new_img[t] = _requant_like(dequantize_weight(base) + delta, base)
+        else:
+            new_img[t] = base + delta.astype(base.dtype)
     new_layers["img"] = new_img
     out = dict(params)
     out["layers"] = new_layers
@@ -100,6 +156,8 @@ def stack_loras(loras: Sequence[Params]) -> Params:
     """
     if not loras:
         raise ValueError("stack_loras needs at least one adapter")
+    loras = [{k: (dequantize_weight(v) if k in _FACTOR_KEYS else v)
+              for k, v in p.items()} for p in loras]
     rank = max(p[f"{TARGETS[0]}_a"].shape[-1] for p in loras)
     out: Params = {
         "scales": jnp.stack([jnp.asarray(p["scale"], jnp.float32)
@@ -135,10 +193,15 @@ def init_text_lora(key: jax.Array, d_model: int, rank: int = 8,
 def fold_text_lora(params: Params, tl: Params, sign: float = 1.0) -> Params:
     """Text-encoder params with the adapter folded into the last layer's
     ``wo`` (functional)."""
-    delta = (tl["a"] @ tl["b"]) * tl["scale"] * sign
+    delta = (dequantize_weight(tl["a"]) @ dequantize_weight(tl["b"])) \
+        * tl["scale"] * sign
     layers = list(params["layers"])
     last = dict(layers[-1])
-    last["wo"] = last["wo"] + delta.astype(last["wo"].dtype)
+    wo = last["wo"]
+    if is_quantized(wo):
+        last["wo"] = _requant_like(dequantize_weight(wo) + delta, wo)
+    else:
+        last["wo"] = wo + delta.astype(wo.dtype)
     layers[-1] = last
     out = dict(params)
     out["layers"] = layers
@@ -150,6 +213,8 @@ def stack_text_loras(tls: Sequence[Params]) -> Params:
     ``scales [G]`` (ranks zero-padded to the largest)."""
     if not tls:
         raise ValueError("stack_text_loras needs at least one adapter")
+    tls = [{k: (dequantize_weight(v) if k in ("a", "b") else v)
+            for k, v in p.items()} for p in tls]
     rank = max(p["a"].shape[-1] for p in tls)
     return {
         "a": jnp.stack([_pad_rank(p["a"], 1, rank) for p in tls]),

@@ -29,6 +29,8 @@ from repro.nn.layers import (
     gqa_attention,
     grouped_lora_dense,
     modulate,
+    qdense,
+    quantize_dense,
     rms_norm,
     shard_map_compat,
     split,
@@ -68,7 +70,7 @@ def _lora_proj(h: jax.Array, w: jax.Array, lora, target: str) -> jax.Array:
     ``(layer_stacks, idx, scales)`` with ``layer_stacks[f"{target}_a"]``
     ``[G, d, r]`` / ``..._b`` ``[G, r, d]``."""
     if lora is None:
-        return h @ w
+        return qdense(h, w)
     stacks, idx, scales = lora
     return grouped_lora_dense(h, w, stacks[f"{target}_a"],
                               stacks[f"{target}_b"], idx, scales)
@@ -76,7 +78,7 @@ def _lora_proj(h: jax.Array, w: jax.Array, lora, target: str) -> jax.Array:
 
 def _stream_qkv(p: Params, x: jax.Array, t_emb: jax.Array, n_heads: int,
                 lora=None):
-    ada = jax.nn.silu(t_emb) @ p["ada"] + p["ada_b"]
+    ada = qdense(jax.nn.silu(t_emb), p["ada"]) + p["ada_b"]
     (s1, g1, m1, s2, g2, m2) = jnp.split(ada, 6, axis=-1)
     m1 = 1.0 + m1          # gate baseline: identity-plus-delta
     m2 = 1.0 + m2
@@ -97,8 +99,8 @@ def _stream_post(p: Params, x: jax.Array, attn_out: jax.Array, mods, n_heads: in
     proj = _lora_proj(attn_out.reshape(b, s, -1), p["wo"], lora, "wo")
     x = x + (m1[:, None, :] * proj).astype(x.dtype)
     h = modulate(rms_norm(x, p["norm2"]), s2, g2).astype(x.dtype)
-    x = x + (m2[:, None, :] * (jax.nn.gelu(h @ p["w1"]) @ p["w2"])
-             ).astype(x.dtype)
+    x = x + (m2[:, None, :] * qdense(jax.nn.gelu(qdense(h, p["w1"])),
+                                     p["w2"])).astype(x.dtype)
     return x
 
 
@@ -121,6 +123,35 @@ def mmdit_block(
     x = _stream_post(p["img"], x, out_i, mods_i, n_heads, lora=lora)
     c = _stream_post(p["txt"], c, out_t, mods_t, n_heads)
     return x, c
+
+
+# ------------------------------------------------------------ quantization
+
+# the per-layer stream projections carry essentially all backbone
+# parameters; embeds / final head stay fp32 (tiny, I/O-critical)
+_QUANT_STREAM_KEYS = ("ada", "wq", "wk", "wv", "wo", "w1", "w2")
+
+
+def quantize_mmdit_params(params: Params) -> Params:
+    """Quantize the layer-stacked stream projection weights per the
+    active ``REPRO_QUANT`` mode (identity when off).  The quantized
+    dicts replace the plain arrays in-place in a copied tree, so they
+    ride the layer scan's xs exactly like the fp32 weights did."""
+    layers = params.get("layers")
+    if layers is None:
+        return params
+    new_layers = {}
+    for stream, sp in layers.items():
+        if not isinstance(sp, dict):
+            new_layers[stream] = sp
+            continue
+        new_layers[stream] = {
+            k: (quantize_dense(v) if k in _QUANT_STREAM_KEYS else v)
+            for k, v in sp.items()
+        }
+    out = dict(params)
+    out["layers"] = new_layers
+    return out
 
 
 # ---------------------------------------------------------------- backbone

@@ -27,6 +27,7 @@ from repro.nn.layers import shard_map_compat
 from repro.diffusion.encoders import (
     init_text_encoder,
     init_vae,
+    quantize_text_params,
     stable_hash,
     text_encoder_apply,
     tokenize,
@@ -39,6 +40,8 @@ from repro.diffusion.lora import (
     fold_text_lora,
     init_lora,
     init_text_lora,
+    quantize_lora,
+    quantize_text_lora,
     randomize_lora,
     stack_loras,
     stack_text_loras,
@@ -49,11 +52,13 @@ from repro.diffusion.mmdit import (
     init_mmdit,
     mmdit_apply,
     mmdit_apply_seq_sharded,
+    quantize_mmdit_params,
     seq_shard_divisor,
 )
 from repro.diffusion.sampler import (
     cfg_combine,
     denoise_step_jit,
+    donate_buffers_enabled,
     fused_cfg_velocity,
 )
 
@@ -184,11 +189,11 @@ class TextEncoder(Model):
 
     def load(self, device: Any = None) -> Dict[str, Any]:
         cfg = self.family.toy
-        params = init_text_encoder(
+        params = quantize_text_params(init_text_encoder(
             jax.random.PRNGKey(stable_hash(self.model_id) % 2**31),
             _TOY_VOCAB, cfg.text_dim, n_layers=2, n_heads=4,
             max_len=cfg.text_tokens,
-        )
+        ))
         apply = jax.jit(lambda p, ids: text_encoder_apply(p, ids, n_heads=4))
         apply_ml = jax.jit(
             lambda p, ids, stack, idx: text_encoder_apply(
@@ -205,7 +210,10 @@ class TextEncoder(Model):
         for pc in patch_components:
             if "text_lora" in pc:
                 params = fold_text_lora(params, pc["text_lora"])
-        return {**components, "params": params}
+        # quantize-on-fold: the backend's fold cache stores this copy, so
+        # it carries the active REPRO_QUANT representation even when the
+        # base components predate a mode flip
+        return {**components, "params": quantize_text_params(params)}
 
     def execute_batch_multilora(
         self,
@@ -256,6 +264,7 @@ class TextEncoder(Model):
             lora_rank=8,
             lora_flops_per_rank=4.0 * f.text_tokens * 4096,
             lora_bytes_per_adapter=4.0 * 4096 * 8,
+            quantizable=True,            # qdense projections (REPRO_QUANT)
         )
 
 
@@ -286,8 +295,8 @@ class DiffusionBackbone(Model):
 
     def load(self, device: Any = None) -> Dict[str, Any]:
         cfg = self.family.toy
-        params = init_mmdit(
-            jax.random.PRNGKey(stable_hash(self.model_id) % 2**31), cfg)
+        params = quantize_mmdit_params(init_mmdit(
+            jax.random.PRNGKey(stable_hash(self.model_id) % 2**31), cfg))
         apply = jax.jit(
             lambda p, lat, t, emb, res: mmdit_apply(p, cfg, lat, t, emb, res)
         )
@@ -325,11 +334,15 @@ class DiffusionBackbone(Model):
         patches: List[Model],
         patch_components: List[Dict[str, Any]],
     ) -> Dict[str, Any]:
-        """LoRA fold, done ONCE per (model, patch set) by the backend."""
+        """LoRA fold, done ONCE per (model, patch set) by the backend.
+
+        Quantize-on-fold: the folded copy the backend caches carries the
+        active ``REPRO_QUANT`` representation (fold dequantizes the
+        targets, applies the delta in f32, requantizes)."""
         params = components["params"]
         for pc in patch_components:
             params = fold_lora(params, pc["lora"])
-        return {**components, "params": params}
+        return {**components, "params": quantize_mmdit_params(params)}
 
     def _velocity(
         self,
@@ -557,6 +570,10 @@ class DiffusionBackbone(Model):
             lora_flops_per_rank=16.0 * f.n_layers_real * f.image_tokens
             * f.d_model_real,
             lora_bytes_per_adapter=16.0 * f.n_layers_real * f.d_model_real * 8,
+            # stream projections quantize (REPRO_QUANT): the roofline
+            # prices int8 forwards at the doubled MXU issue rate and the
+            # halved weight stream
+            quantizable=True,
         )
 
     def build_segment(self, controlnets: List["ControlNet"],
@@ -583,9 +600,9 @@ class ControlNet(Model):
 
     def load(self, device: Any = None) -> Dict[str, Any]:
         cfg = self.family.toy
-        params = init_controlnet(
+        params = quantize_mmdit_params(init_controlnet(
             jax.random.PRNGKey(stable_hash(self.model_id) % 2**31), cfg
-        )
+        ))
         apply = jax.jit(
             lambda p, lat, cond, t, emb: controlnet_apply(p, cfg, lat, cond, t, emb)
         )
@@ -678,10 +695,17 @@ class ControlNet(Model):
             max_parallelism=2,           # batch-axis data parallelism
             max_batch=8,
             calls_per_request=f.denoise_steps,
+            quantizable=True,            # same stream projections as MMDiT
         )
 
 
 class VAEDecode(Model):
+    # decode of batch N may overlap the next batch's denoise segment on
+    # the same executor (REPRO_OVERLAP): stateless, no patches, and its
+    # VPU/memory-bound conv stack interleaves under the MXU-bound
+    # backbone forward
+    overlappable = True
+
     def __init__(self, family: DiffusionFamily) -> None:
         self.family = family
         super().__init__(model_id=f"vae:{family.name}")
@@ -937,6 +961,10 @@ class DenoiseSegment(Model):
             "backbone": self.backbone.load(device),
             "cns": [cn.load(device) for cn in self.cns],
             "cfg": self.family.toy,
+            # donation is baked into the jit at load time (REPRO_DONATE);
+            # execute() consults this marker for the copy-on-first-chunk
+            # guard
+            "donate": donate_buffers_enabled(),
         }
         comps["scan"] = self._make_scan()
         comps["scan_ml"] = self._make_scan(multilora=True)
@@ -1003,6 +1031,11 @@ class DenoiseSegment(Model):
             lat, _ = jax.lax.scan(body, lat, (t_mid, t_cur, t_next))
             return lat
 
+        if donate_buffers_enabled():
+            # donate the latent carry (positional arg 2): XLA aliases the
+            # chunk's input latents to its output, so segment chunks
+            # update the buffer in place across dispatches
+            return jax.jit(run, donate_argnums=(2,))
         return jax.jit(run)
 
     # ---------------------------------------------------------- execution
@@ -1069,6 +1102,13 @@ class DenoiseSegment(Model):
         if steps <= 0:
             return {"latents": kw["latents"]}
         lat = kw["latents"]
+        if model_components.get("donate") and start == 0:
+            # never donate the datastore's buffer: the first chunk's
+            # latents are an engine-held value other consumers (and
+            # recovery) may still read — donate a private copy instead.
+            # Later chunks receive the segment-owned carry, which this
+            # scan's output replaces, so those donate in place.
+            lat = jnp.copy(lat)
         b = int(lat.shape[0])
         t_mid, t_cur, t_next, guidance = self._step_arrays([kw], [b], steps)
         cond = kw.get("cond_latents") if self.cns else jnp.zeros((0,))
@@ -1276,6 +1316,9 @@ class DenoiseSegment(Model):
             lora_rank=b.lora_rank,
             lora_flops_per_rank=b.lora_flops_per_rank,
             lora_bytes_per_adapter=b.lora_bytes_per_adapter,
+            # the fused chain is backbone + controlnets end to end — every
+            # constituent quantizes, so the segment prices quantized too
+            quantizable=True,
         )
 
 
@@ -1295,14 +1338,16 @@ class LoRAAdapter(Model):
     def load(self, device: Any = None) -> Dict[str, Any]:
         key = jax.random.PRNGKey(stable_hash(self.model_id) % 2**31)
         lora = init_lora(key, self.family.toy, rank=self.rank)
+        # quantized factors (REPRO_QUANT): the AdapterPool's byte budget
+        # and the proc plane's adapter ships both see the small form
         return {
-            "lora": randomize_lora(key, lora),
+            "lora": quantize_lora(randomize_lora(key, lora)),
             # companion factors for a patched TextEncoder (grouped or
             # folded into the last layer's wo); unused unless the adapter
             # is attached to the text encoder as well
-            "text_lora": init_text_lora(
+            "text_lora": quantize_text_lora(init_text_lora(
                 jax.random.fold_in(key, 1), self.family.toy.text_dim,
-                rank=self.rank),
+                rank=self.rank)),
         }
 
     def execute(self, model_components: Dict[str, Any], **kw: Any) -> Dict[str, Any]:

@@ -12,6 +12,7 @@
 
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -22,6 +23,37 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.diffusion.config import DiTConfig
 from repro.diffusion.mmdit import mmdit_apply
 from repro.nn.layers import shard_map_compat
+
+
+# ----------------------------------------------------- donated latent buffers
+#
+# ``REPRO_DONATE=1`` threads ``jax.jit(..., donate_argnums=...)`` through
+# the per-step Euler update and the fused segment scan (see
+# ``DenoiseSegment._make_scan``): the incoming latent buffer is donated to
+# the computation, so XLA aliases it to the output and the latents update
+# in place across segment chunks instead of allocating a fresh buffer per
+# dispatch.  Donation invariant: a donated buffer is DEAD after the call —
+# callers must never donate a datastore-held value (the segment path
+# copies the first chunk's input; later chunks donate the segment-owned
+# carry), and the chaos plane's replay-from-carry recovery requires the
+# flag off.  Read at load/trace time, like the quant and flash flags.
+
+_donate_enabled: bool = os.environ.get(
+    "REPRO_DONATE", "0").lower() not in ("0", "false", "off", "")
+
+
+def set_donate_buffers(enabled: bool) -> bool:
+    """Toggle latent-buffer donation; returns the previous value.  Takes
+    effect on the next model load (the segment scan bakes the donation in
+    at jit time)."""
+    global _donate_enabled
+    prev = _donate_enabled
+    _donate_enabled = bool(enabled)
+    return prev
+
+
+def donate_buffers_enabled() -> bool:
+    return _donate_enabled
 
 
 def flow_schedule(num_steps: int, shift: float = 1.0) -> jnp.ndarray:
@@ -40,6 +72,7 @@ def denoise_step(latents: jnp.ndarray, velocity: jnp.ndarray,
 
 
 _denoise_step_jitted = None
+_denoise_step_jitted_donated = None
 
 
 def denoise_step_jit(latents: jnp.ndarray, velocity: jnp.ndarray,
@@ -48,8 +81,18 @@ def denoise_step_jit(latents: jnp.ndarray, velocity: jnp.ndarray,
     step MUST run under jit so XLA makes the same contraction (FMA)
     decision for ``lat + dt*v`` as it does inside the fused segment scan —
     eager op-by-op execution rounds the product separately and drifts by
-    1 ulp whenever ``dt`` is not a power of two."""
-    global _denoise_step_jitted
+    1 ulp whenever ``dt`` is not a power of two.
+
+    Under ``REPRO_DONATE`` the latent operand is donated: the update is
+    in place (the input buffer is dead afterwards).  Donation does not
+    change the arithmetic, so the FMA bit-exactness guarantee holds on
+    both routes."""
+    global _denoise_step_jitted, _denoise_step_jitted_donated
+    if _donate_enabled:
+        if _denoise_step_jitted_donated is None:
+            _denoise_step_jitted_donated = jax.jit(
+                denoise_step, donate_argnums=(0,))
+        return _denoise_step_jitted_donated(latents, velocity, t_cur, t_next)
     if _denoise_step_jitted is None:
         _denoise_step_jitted = jax.jit(denoise_step)
     return _denoise_step_jitted(latents, velocity, t_cur, t_next)

@@ -1,0 +1,19 @@
+"""Quantized (w8a8 int8 / fp8) matmul kernels for the raw-speed plane."""
+
+from repro.kernels.quant_matmul.ops import (
+    dequantize_weight,
+    is_quantized,
+    quant_apply,
+    quant_kernel_enabled,
+    quantize_weight,
+    set_quant_kernel,
+)
+
+__all__ = [
+    "dequantize_weight",
+    "is_quantized",
+    "quant_apply",
+    "quant_kernel_enabled",
+    "quantize_weight",
+    "set_quant_kernel",
+]

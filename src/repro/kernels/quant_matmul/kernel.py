@@ -1,0 +1,83 @@
+"""Pallas w8a8 int8 matmul kernel: ``y = (x_q @ w_q) * outer(x_s, w_s)``.
+
+The raw-speed pass (ROADMAP item 5) quantizes the backbone/text-encoder
+projection weights to int8 with **per-output-channel** scales and the
+activations dynamically to int8 with **per-row** scales, so the inner
+product runs on the MXU's int8 path at twice the fp32 issue rate and a
+quarter of the weight traffic.  The kernel accumulates in int32 — exact
+for K up to 2^15 worst-case int8 products — and applies both scale
+vectors once per output tile at the k-sweep finalize.
+
+Tiling mirrors :mod:`repro.kernels.lora_matmul.kernel`: grid
+``(m_tiles, n_tiles, k_tiles)`` with the k sweep innermost (sequential
+on TPU), an int32 VMEM accumulator scratch, and the scale vectors riding
+as ``[m, 1]`` / ``[1, n]`` blocks so the finalize is one fused
+multiply.  int8 min-tile on TPU is (32, 128); the wrapper in
+:mod:`repro.kernels.quant_matmul.ops` pads every operand to tile
+multiples before the call.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(xq_ref, wq_ref, xs_ref, ws_ref, o_ref, acc_scratch):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    xq = xq_ref[...]                                    # [bm, bk] int8
+    wq = wq_ref[...]                                    # [bk, bn] int8
+    acc_scratch[...] += jax.lax.dot(
+        xq, wq, preferred_element_type=jnp.int32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        xs = xs_ref[...].astype(jnp.float32)            # [bm, 1]
+        ws = ws_ref[...].astype(jnp.float32)            # [1, bn]
+        y = acc_scratch[...].astype(jnp.float32) * xs * ws
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def quant_matmul(
+    xq: jax.Array,              # [M, K] int8
+    wq: jax.Array,              # [K, N] int8
+    xs: jax.Array,              # [M, 1] f32 per-row activation scales
+    ws: jax.Array,              # [1, N] f32 per-channel weight scales
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype: jnp.dtype = jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = xq.shape
+    _, n = wq.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n), pl.cdiv(k, block_k))
+
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_m, 1), lambda mi, ni, ki: (mi, 0)),
+            pl.BlockSpec((1, block_n), lambda mi, ni, ki: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xq, wq, xs, ws)

@@ -1,0 +1,165 @@
+"""Jit'd wrapper + quantize/dequantize helpers for the quantized matmul.
+
+A quantized projection weight is a two-leaf pytree (the
+``QuantizedParams`` side-structure)::
+
+    {"qw": int8 | float8_e4m3fn array [..., K, N],
+     "qs": float32 array            [..., 1, N]}   # per-output-channel
+
+Being a plain dict of arrays it rides ``lax.scan`` xs (the MMDiT layer
+stack), ``jax.tree`` size accounting (``Executor._tree_bytes`` sees the
+int8 leaves), and the proc-plane pickle transport unchanged — the whole
+point of quantize-on-fold: the fold cache, the AdapterPool, and the wire
+all carry the ~4x smaller representation.
+
+* **int8** mode is w8a8: per-channel symmetric weight scales, dynamic
+  per-row activation scales, int32 accumulation.  The Pallas kernel
+  (TPU) and the jnp oracle produce identical results.
+* **fp8** mode is weight-only (``float8_e4m3fn`` storage with the same
+  per-channel scales); the matmul upcasts to f32 — there is no fp8 MXU
+  path to exploit off-TPU, so fp8 buys residency, not issue rate.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.kernel import quant_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+_INT8_MAX = 127.0
+_FP8_MAX = 448.0          # float8_e4m3fn largest finite
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# Kernel routing mirrors the grouped-LoRA flag: Pallas on TPU, the jnp
+# oracle elsewhere; tests and the env flag can force either.  Read at
+# TRACE time — jitted applies keep whichever route was live when traced.
+_quant_kernel_route: Optional[bool] = None
+_env = os.environ.get("REPRO_QUANT_KERNEL")
+if _env is not None:
+    _quant_kernel_route = _env.lower() not in ("0", "false", "off")
+
+
+def set_quant_kernel(enabled: Optional[bool]) -> Optional[bool]:
+    """Force (True/False) or reset (None = auto: TPU only) the Pallas
+    quant-matmul route; returns the previous setting."""
+    global _quant_kernel_route
+    prev = _quant_kernel_route
+    _quant_kernel_route = enabled
+    return prev
+
+
+def quant_kernel_enabled() -> bool:
+    if _quant_kernel_route is not None:
+        return _quant_kernel_route
+    return _is_tpu()
+
+
+# ------------------------------------------------------------- quantize
+def is_quantized(w) -> bool:
+    """True iff ``w`` is a QuantizedParams side-structure."""
+    return isinstance(w, dict) and set(w.keys()) == {"qw", "qs"}
+
+
+def quantize_weight(w: jax.Array, mode: str) -> dict:
+    """Quantize a dense projection weight ``[..., K, N]`` (possibly
+    layer-stacked) to the QuantizedParams form, symmetric per output
+    channel along the last axis."""
+    if is_quantized(w):
+        return w
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)      # [..., 1, N]
+    if mode == "int8":
+        qs = jnp.where(amax > 0, amax / _INT8_MAX, 1.0)
+        qw = jnp.clip(jnp.round(wf / qs), -_INT8_MAX, _INT8_MAX)
+        qw = qw.astype(jnp.int8)
+    elif mode == "fp8":
+        qs = jnp.where(amax > 0, amax / _FP8_MAX, 1.0)
+        qw = (wf / qs).astype(jnp.float8_e4m3fn)
+    else:
+        raise ValueError(f"unknown quant mode {mode!r}")
+    return {"qw": qw, "qs": qs.astype(jnp.float32)}
+
+
+def dequantize_weight(q) -> jax.Array:
+    """Materialize the f32 weight ``[..., K, N]`` a QuantizedParams dict
+    stands for (used by routes that need the dense weight, e.g. the
+    grouped multi-LoRA projection)."""
+    if not is_quantized(q):
+        return q
+    return q["qw"].astype(jnp.float32) * q["qs"]
+
+
+def _quantize_rows(x2: jax.Array):
+    """Dynamic per-row int8 activation quantization: ``[M, K]`` f32 ->
+    (int8 values, ``[M, 1]`` f32 scales)."""
+    amax = jnp.max(jnp.abs(x2), axis=-1, keepdims=True)      # [M, 1]
+    xs = jnp.where(amax > 0, amax / _INT8_MAX, 1.0)
+    xq = jnp.clip(jnp.round(x2 / xs), -_INT8_MAX, _INT8_MAX)
+    return xq.astype(jnp.int8), xs.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- apply
+def quant_apply(x: jax.Array, qw: jax.Array, qs: jax.Array, *,
+                use_kernel: Optional[bool] = None,
+                block_m: int = 128, block_n: int = 128,
+                block_k: int = 128) -> jax.Array:
+    """Quantized dense projection ``y = x @ dequant(qw, qs)`` computed
+    on the quantized path: int8 weights go through the w8a8 int8 matmul
+    (Pallas kernel on TPU, jnp int32-accumulating oracle elsewhere);
+    fp8 weights upcast and fold the channel scale into the output."""
+    if use_kernel is None:
+        use_kernel = quant_kernel_enabled()
+    return _quant_apply(x, qw, qs, block_m, block_n, block_k,
+                        bool(use_kernel))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_kernel")
+)
+def _quant_apply(x, qw, qs, block_m, block_n, block_k, use_kernel):
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = qw.shape[-1]
+    # a layer slice of a stacked weight arrives as [1, K, N]/[1, 1, N]
+    qw2 = qw.reshape(k, n)
+    ws = qs.reshape(1, n)
+    x2 = x.astype(jnp.float32).reshape(-1, k)
+    if qw2.dtype != jnp.int8:
+        # fp8 (weight-only): per-channel scale commutes with the matmul
+        out = (x2 @ qw2.astype(jnp.float32)) * ws
+        return out.reshape(*lead, n)
+    xq, xs = _quantize_rows(x2)
+    if not use_kernel:
+        out = quant_matmul_ref(xq, qw2, xs, ws)
+        return out.reshape(*lead, n)
+    m = x2.shape[0]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    xqp = _pad_to(_pad_to(xq, 0, bm), 1, bk)
+    wqp = _pad_to(_pad_to(qw2, 0, bk), 1, bn)
+    xsp = _pad_to(xs, 0, bm)
+    wsp = _pad_to(ws, 1, bn)
+    out = quant_matmul(
+        xqp, wqp, xsp, wsp,
+        block_m=bm, block_n=bn, block_k=bk, interpret=not _is_tpu(),
+    )
+    return out[:m, :n].reshape(*lead, n)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the quantized matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(xq: jax.Array, wq: jax.Array, xs: jax.Array,
+                     ws: jax.Array) -> jax.Array:
+    """``y = (x_q @ w_q) * outer(x_s, w_s)`` with int32 accumulation —
+    the bit-exact reference the Pallas kernel must reproduce."""
+    acc = jax.lax.dot(xq, wq, preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * xs.astype(jnp.float32) \
+        * ws.astype(jnp.float32)

@@ -51,6 +51,60 @@ def flash_attention_enabled() -> bool:
     return _flash_enabled
 
 
+# ------------------------------------------------- quantized-forward routing
+#
+# The raw-speed plane's weight quantization (``REPRO_QUANT=int8|fp8|off``,
+# default off).  Like the flash flag this is consulted when parameters are
+# MATERIALIZED (model load / LoRA fold), not inside jitted applies: the
+# applies are structure-driven — they meet a ``QuantizedParams`` dict
+# (see :mod:`repro.kernels.quant_matmul.ops`) and take the quantized
+# projection path, or a plain array and take the fp32 path.
+
+_QUANT_MODES = ("off", "int8", "fp8")
+_quant_mode: str = os.environ.get("REPRO_QUANT", "off").lower()
+if _quant_mode in ("", "0", "false"):
+    _quant_mode = "off"
+if _quant_mode not in _QUANT_MODES:
+    raise ValueError(
+        f"REPRO_QUANT={_quant_mode!r}: expected one of {_QUANT_MODES}")
+
+
+def set_quant_mode(mode: str) -> str:
+    """Set the weight-quantization mode (``off``/``int8``/``fp8``);
+    returns the previous mode.  Takes effect on the next model load or
+    LoRA fold — already-materialized components keep their dtype."""
+    global _quant_mode
+    if mode not in _QUANT_MODES:
+        raise ValueError(f"quant mode {mode!r}: expected one of {_QUANT_MODES}")
+    prev = _quant_mode
+    _quant_mode = mode
+    return prev
+
+
+def quant_mode() -> str:
+    return _quant_mode
+
+
+def quantize_dense(w: jax.Array):
+    """Quantize one dense projection weight per the active mode (identity
+    when ``off`` or already quantized)."""
+    if _quant_mode == "off":
+        return w
+    from repro.kernels.quant_matmul.ops import quantize_weight
+
+    return quantize_weight(w, _quant_mode)
+
+
+def qdense(h: jax.Array, w) -> jax.Array:
+    """Dense projection that accepts either a plain ``[d_in, d_out]``
+    weight (fp32 matmul) or a QuantizedParams dict (quantized path)."""
+    from repro.kernels.quant_matmul.ops import is_quantized, quant_apply
+
+    if is_quantized(w):
+        return quant_apply(h, w["qw"], w["qs"])
+    return h @ w
+
+
 def shard_map_compat(f, mesh, in_specs, out_specs):
     """``jax.shard_map`` across JAX versions: top-level with ``check_vma``
     on current releases, ``jax.experimental.shard_map`` with ``check_rep``
@@ -82,7 +136,9 @@ def grouped_lora_dense(
     jnp grouped oracle elsewhere; rows with ``idx < 0`` are bit-exactly
     the plain projection on the jnp route."""
     from repro.kernels.lora_matmul.ops import lora_apply_grouped
+    from repro.kernels.quant_matmul.ops import dequantize_weight
 
+    w = dequantize_weight(w)    # grouped kernel needs the dense base
     bsz, s, d_in = h.shape
     rows_idx = jnp.repeat(idx.astype(jnp.int32), s)
     out = lora_apply_grouped(h.reshape(bsz * s, d_in), w, a, b,
@@ -431,7 +487,7 @@ def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype: Any = jnp.float32) 
 
 
 def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
-    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    return qdense(jax.nn.gelu(qdense(x, p["w1"]) + p["b1"]), p["w2"]) + p["b2"]
 
 
 # ------------------------------------------------------------- embeddings
